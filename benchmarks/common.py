@@ -1,0 +1,45 @@
+"""Shared benchmark plumbing.
+
+Every ``figN_*`` module exposes ``run() -> List[Row]``; ``benchmarks.run``
+times each module and prints ``name,us_per_call,derived`` CSV (one row per
+reported metric) and dumps the raw rows to ``benchmarks/out/<module>.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+
+
+@dataclass
+class Row:
+    name: str               # metric id, e.g. "fig12/speedup_vs_mactree"
+    derived: float          # the reproduced number
+    paper: Optional[float] = None   # the paper's value for the same cell
+    note: str = ""
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "derived": self.derived,
+                "paper": self.paper, "note": self.note}
+
+
+def emit(module: str, rows: List[Row], elapsed_s: float) -> None:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"{module}.json"), "w") as f:
+        json.dump([r.to_dict() for r in rows], f, indent=1)
+    us = elapsed_s * 1e6 / max(1, len(rows))
+    for r in rows:
+        paper = "" if r.paper is None else f"{r.paper}"
+        print(f"{r.name},{us:.1f},{r.derived:.6g}"
+              + (f",paper={paper}" if paper else "")
+              + (f",{r.note}" if r.note else ""))
+
+
+def geomean(xs) -> float:
+    import numpy as np
+    xs = np.asarray(list(xs), dtype=float)
+    return float(np.exp(np.mean(np.log(xs))))

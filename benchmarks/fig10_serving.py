@@ -1,0 +1,65 @@
+"""Fig. 10 — serving latency (E2E and TBT) under Poisson request rates.
+
+Duplex-style serving framework: H100x8 prefill for all systems; decode on
+the device under test (continuous batching, 8K-input / 1K-output requests).
+Latencies are reported normalized to SNAKE at each rate, matching the
+paper's presentation (GPU ~1.5-3.0x E2E / 1.5-4.0x TBT; MAC tree
+~1.1-2.3x / 1.3-2.2x; 48x48 ~1.1-2.4x / 1.1-2.2x; 8x288 worst, TBT up to
+~4.5x).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import Row, geomean
+from repro.core.hw import fixed_sa_system, mactree_system, snake_system
+from repro.core.operators import PAPER_MODELS
+from repro.core.serving_sim import (DecodeLatencyModel, gpu_latency_model,
+                                    nmp_latency_model, simulate_serving)
+
+MODELS = ("LLaMA3-70B", "Qwen3-30B-A3B")   # one dense + one MoE
+NORM_RATES = (0.3, 0.6, 0.9)               # fraction of saturation rate
+N_REQ = 64
+TP = 8
+IN_LEN, OUT_LEN = 8192, 1024
+
+
+def _saturation_rate(spec, lat: DecodeLatencyModel) -> float:
+    """Request rate at which decode (or the shared prefill engine) saturates:
+    min(prefill-limited, decode-limited at a 48-deep continuous batch)."""
+    from repro.core.serving_sim import _prefill_time
+    r_prefill = 1.0 / _prefill_time(spec, IN_LEN)
+    tbt48 = lat(48, IN_LEN + OUT_LEN // 2) or 1e-9
+    r_decode = 48 / (OUT_LEN * tbt48)
+    return min(r_prefill, r_decode)
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    systems = {"MAC-Tree": mactree_system(),
+               "SA-48x48": fixed_sa_system(48, 48),
+               "SA-8x288": fixed_sa_system(8, 288)}
+    for model in MODELS:
+        spec = PAPER_MODELS[model]
+        lat_snake = nmp_latency_model(snake_system(), spec, tp=TP)
+        lats: Dict[str, DecodeLatencyModel] = {
+            k: nmp_latency_model(s, spec, tp=TP) for k, s in systems.items()}
+        lats["GPU"] = gpu_latency_model(spec, tp=TP)
+        sat = _saturation_rate(spec, lat_snake)
+        ratios = {k: {"e2e": [], "tbt": []} for k in lats}
+        for nr in NORM_RATES:
+            rate = nr * sat
+            base = simulate_serving(lat_snake, spec, rate, system="SNAKE",
+                                    n_requests=N_REQ)
+            for k, lm in lats.items():
+                rep = simulate_serving(lm, spec, rate, system=k,
+                                       n_requests=N_REQ)
+                e2e, tbt = rep.normalized_to(base)
+                ratios[k]["e2e"].append(e2e)
+                ratios[k]["tbt"].append(tbt)
+        for k, d in ratios.items():
+            rows.append(Row(f"fig10/{model}/e2e_vs_snake_{k}",
+                            geomean(d["e2e"])))
+            rows.append(Row(f"fig10/{model}/tbt_vs_snake_{k}",
+                            geomean(d["tbt"])))
+    return rows

@@ -1,0 +1,46 @@
+"""Fig. 11 — PU-level area breakdown, compute-area efficiency, power.
+
+Pure calibration reproduction: the paper's RTL synthesis found that under
+the same 2.35 mm^2 PU budget the MAC tree fits 16x16x16 = 4,096 MACs, a
+conventional SA + vector core fits 4 x 48x48 = 9,216, and SNAKE fits
+4 x 64x64 = 16,384 (2.25x / 4.00x compute-area efficiency), with SNAKE's
+buffering share shrinking from 53.6% to 28.1%.  The energy model must land
+on the reported 61.8 W logic-die power breakdown at the 800 MHz thermal
+operating point (38.5 matrix / 14.2 vector / 4.4 control / 4.8 NoC).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row
+from repro.core.energy import peak_power_breakdown
+from repro.core.hw import area_model, snake_system
+
+PAPER_POWER = {"matrix_w": 38.5, "vector_w": 14.2, "ctrl_w": 4.4,
+               "noc_w": 4.8}
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    am = area_model()
+    rows.append(Row("fig11/cae_sa_vc_vs_mactree",
+                    am["SA+VectorCore"]["compute_area_efficiency"],
+                    paper=2.25))
+    rows.append(Row("fig11/cae_snake_vs_mactree",
+                    am["SNAKE"]["compute_area_efficiency"], paper=4.00))
+    rows.append(Row("fig11/snake_buffer_area_share",
+                    am["SNAKE"]["breakdown"]["buffers"], paper=0.281))
+    rows.append(Row("fig11/sa_vc_buffer_area_share",
+                    am["SA+VectorCore"]["breakdown"]["buffers"], paper=0.536))
+    rows.append(Row("fig11/snake_vector_area_share",
+                    am["SNAKE"]["breakdown"]["vector"], paper=0.088))
+
+    pw = peak_power_breakdown(snake_system())
+    total = sum(pw.values()) + pw.pop("sram_w", 0.0) * 0  # sram folded below
+    for k, v in pw.items():
+        paper = PAPER_POWER.get(k)
+        rows.append(Row(f"fig11/power_{k}", v, paper=paper))
+    rows.append(Row("fig11/power_total_w",
+                    total, paper=61.8,
+                    note="logic-die power at the 800 MHz operating point"))
+    return rows

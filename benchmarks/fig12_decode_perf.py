@@ -1,0 +1,67 @@
+"""Fig. 12 — decode speedup and logic-die energy efficiency vs baselines.
+
+All five paper models, batches 8-64, ctx 8K+512 (the paper's 8K-input /
+1K-output serving point mid-generation), on the 8-device TP=8 system
+(paper §6.1.3).  Baselines: Stratum-configured MAC tree, fixed 48x48 and
+8x288 SAs (area-normalized, 1 GHz), and 8x H100.
+
+Paper headline averages: 2.90x / 2.40x vs MAC tree, 2.33x / 1.05x vs 48x48,
+3.00x / 1.31x vs 8x288, 11.47x / 5.74x vs GPU.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import Row, geomean
+from repro.core.gpu_model import gpu_decode_step
+from repro.core.hw import fixed_sa_system, mactree_system, snake_system
+from repro.core.operators import PAPER_MODELS
+from repro.core.pipeline import decode_step
+
+CTX = 8192 + 512
+TP = 8
+BATCHES = (8, 16, 32, 64)
+
+PAPER = {"MAC-Tree": (2.90, 2.40), "SA-48x48": (2.33, 1.05),
+         "SA-8x288": (3.00, 1.31), "GPU": (11.47, 5.74)}
+
+
+def collect() -> Dict[str, Dict[str, list]]:
+    systems = {"MAC-Tree": mactree_system(),
+               "SA-48x48": fixed_sa_system(48, 48),
+               "SA-8x288": fixed_sa_system(8, 288)}
+    snake = snake_system()
+    out = {k: {"speedup": [], "energy_eff": []} for k in
+           list(systems) + ["GPU"]}
+    per_model = {}
+    for name, spec in PAPER_MODELS.items():
+        per_model[name] = {}
+        for b in BATCHES:
+            rs = decode_step(snake, spec, b, CTX, tp=TP)
+            for k, sysm in systems.items():
+                r = decode_step(sysm, spec, b, CTX, tp=TP)
+                out[k]["speedup"].append(r.time_s / rs.time_s)
+                out[k]["energy_eff"].append(
+                    r.energy.logic_die_j / rs.energy.logic_die_j)
+            g = gpu_decode_step(spec, b, CTX, tp=TP)
+            out["GPU"]["speedup"].append(g.time_s / rs.time_s)
+            out["GPU"]["energy_eff"].append(
+                g.energy_j / rs.energy.logic_die_j)
+        per_model[name]["snake_ms_b64"] = rs.time_s * 1e3
+        per_model[name]["snake_tok_s_b64"] = rs.tokens_per_s
+    return out, per_model
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    out, per_model = collect()
+    for k, d in out.items():
+        sp, ee = PAPER[k]
+        rows.append(Row(f"fig12/speedup_vs_{k}", geomean(d["speedup"]),
+                        paper=sp))
+        rows.append(Row(f"fig12/energy_eff_vs_{k}", geomean(d["energy_eff"]),
+                        paper=ee))
+    for name, d in per_model.items():
+        rows.append(Row(f"fig12/{name}/snake_tokens_per_s_b64",
+                        d["snake_tok_s_b64"]))
+    return rows

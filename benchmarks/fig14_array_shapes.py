@@ -1,0 +1,77 @@
+"""Fig. 14 — (a) logical array-shape demand across batch sizes; (b) minimum
+buffer capacities per array shape.
+
+(a) For LLaMA3-70B and Qwen3-30B-A3B at batches 8-64, the distribution of
+serpentine logical shapes the scheduler selects (the preferred shape tracks
+the batch-driven M, though not strictly one-to-one — paper §6.6).
+
+(b) Per logical shape, the minimum weight-side and activation-side buffer
+capacity that sustains stall-free double-buffered execution over the
+OPT-66B single-core decode tiles: elongated shapes need less weight buffer
+but more activation-side buffer (clear trade-off, paper Fig. 14b).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import Row
+from repro.core.gemm import Dataflow, ceil_div
+from repro.core.hw import FP16_BYTES, snake_system
+from repro.core.operators import PAPER_MODELS, layer_ops_tp
+from repro.core.pipeline import decode_step
+
+TP = 8
+CTX = 8192 + 512
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    sys = snake_system()
+
+    # ---- (a) shape demand ---------------------------------------------------
+    for model in ("LLaMA3-70B", "Qwen3-30B-A3B"):
+        spec = PAPER_MODELS[model]
+        hist: Dict[tuple, int] = {}
+        for b in (8, 16, 32, 64):
+            rep = decode_step(sys, spec, b, CTX, tp=TP)
+            for ex in rep.op_execs:
+                if ex.core is not None:
+                    hist[ex.core.logical_shape] = \
+                        hist.get(ex.core.logical_shape, 0) + 1
+        tot = max(1, sum(hist.values()))
+        for shape, n in sorted(hist.items()):
+            rows.append(Row(f"fig14a/{model}/share_{shape[0]}x{shape[1]}",
+                            n / tot))
+
+    # ---- (b) minimum stall-free buffers per shape ---------------------------
+    # For each logical shape and each OPT-66B single-core decode tile:
+    #   weight-side  = the stationary-operand panel that must be resident +
+    #                  prefetched (double buffered): 2 * rows * cols * 2B
+    #                  per spatial tile of the weight matrix staged at once,
+    #                  scaled by the K (IS) / N (OS) panel depth;
+    #   activation side = the streamed operand/partial-sum panel:
+    #                  IS: rows * N_temporal (output accumulation rows)
+    #                  OS: rows * K_temporal (input panel).
+    spec = PAPER_MODELS["OPT-66B"]
+    lo = layer_ops_tp(spec, 8, CTX, TP)
+    tiles = [g.split_k(16).split_n(4) for g in lo.projections
+             if g.count == 1]
+    for rows_, cols in snake_system().substrate.logical_shapes():
+        w_need = a_need = 0
+        for t in tiles:
+            # weight side: the stationary-operand boundary panel injected
+            # from L/R (double buffered), proportional to the column count
+            w_panel = 2 * cols * min(max(t.n, t.k), 512) * FP16_BYTES
+            # activation side: the full row-boundary panel streamed per
+            # temporal step (IS: output accumulation rows; OS: input rows),
+            # proportional to the row count
+            a_panel = 2 * rows_ * min(max(t.n, t.k), 4096) * FP16_BYTES
+            w_need = max(w_need, w_panel)
+            a_need = max(a_need, a_panel)
+        rows.append(Row(f"fig14b/weight_buf_kib_{rows_}x{cols}",
+                        w_need / 1024,
+                        note="falls as the shape gets less elongated"))
+        rows.append(Row(f"fig14b/act_buf_kib_{rows_}x{cols}",
+                        a_need / 1024,
+                        note="rises as the shape gets less elongated"))
+    return rows

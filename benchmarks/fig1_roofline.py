@@ -1,0 +1,58 @@
+"""Fig. 1 — (a) roofline of decode operators on 3D-stacked NMP; (b) Stratum
+memory-side execution analysis.
+
+(a) Places every LLaMA3-70B decode operator's arithmetic intensity against
+the ridge points of Duplex (~8 FLOP/B), Stratum (3.7-6.7 FLOP/B) and SNAKE,
+showing the share of decode FLOPs that lands in the compute-bound regime on
+each substrate — the paper's motivating observation.
+
+(b) Reproduces the Stratum (MAC-tree) execution split on LLaMA3 across batch
+sizes: with double buffering, array-compute time exceeds memory-supply time,
+i.e. the provisioned compute lags the available memory bandwidth.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row
+from repro.core.hw import mactree_system, snake_system
+from repro.core.operators import PAPER_MODELS, layer_ops_tp
+from repro.core.pipeline import decode_step
+
+CTX = 8192 + 512
+TP = 8
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    spec = PAPER_MODELS["LLaMA3-70B"]
+    stratum = mactree_system()
+    duplex_ridge = 8.0
+    snake = snake_system()
+
+    rows.append(Row("fig1a/ridge_stratum_flop_per_byte",
+                    stratum.ridge_point, paper=6.7,
+                    note="paper quotes 3.7-6.7 for Stratum"))
+    rows.append(Row("fig1a/ridge_duplex_flop_per_byte", duplex_ridge,
+                    paper=8.0))
+    rows.append(Row("fig1a/ridge_snake_flop_per_byte", snake.ridge_point))
+
+    for batch in (8, 16, 32, 64):
+        lo = layer_ops_tp(spec, batch, CTX, TP)
+        ops = list(lo.projections) + list(lo.attention) + list(lo.experts)
+        flops = sum(g.flops for g in ops)
+        cb = sum(g.flops for g in ops
+                 if g.arithmetic_intensity > stratum.ridge_point)
+        rows.append(Row(f"fig1a/computebound_flop_share_b{batch}",
+                        cb / flops,
+                        note="share of decode FLOPs above Stratum ridge"))
+
+    # (b) Stratum-configured MAC tree: array time vs memory-supply time.
+    for batch in (8, 16, 32, 64):
+        rep = decode_step(stratum, spec, batch, CTX, tp=TP)
+        comp = sum(e.compute_s for e in rep.op_execs)
+        mem = sum(e.memory_s for e in rep.op_execs)
+        rows.append(Row(f"fig1b/stratum_array_over_memory_time_b{batch}",
+                        comp / mem,
+                        note=">1 means compute lags memory supply (paper)"))
+    return rows

@@ -1,0 +1,99 @@
+"""Fig. 4 — (a) buffer->compute reallocation sweep; (b) dataflow preference.
+
+(a) Fixed per-core area budget, OPT-66B batch 8 (the paper's most
+buffer-conservative point): sweep elongated 8xC arrays from 8x128 to 8x768,
+converting SRAM area into PEs using the Fig. 11 RTL calibration
+(1 MAC ~ 212 bytes of SRAM area).  Reports array-compute time, exposed
+memory-stall time and logic-die energy per decode step.  The paper selects
+8x512: cycles fall up to there, stalls/energy rise sharply beyond.
+
+(b) Dataflow preference: single-core tiled decode workloads of OPT-66B
+(batch 8), grouped by N>K vs N<=K, executed under forced IS and OS. The
+group means show IS preferred when N>K and OS when K>=N (paper Fig. 4b).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from benchmarks.common import Row, geomean
+from repro.core.dataflow import sa_gemm
+from repro.core.gemm import Dataflow
+from repro.core.hw import BufferConfig, SystolicArrayConfig, snake_system
+from repro.core.operators import PAPER_MODELS, layer_ops_tp
+from repro.core.pipeline import decode_step
+
+BYTES_PER_MAC = 212          # Fig. 11 area calibration: SRAM bytes <-> 1 MAC
+ANCHOR_PES = 4096            # 8x512 core
+ANCHOR_BYTES = 448 * 1024    # its buffer allocation (weight+act+out)
+CTX = 8192 + 512
+TP = 1                       # paper Fig. 4 is single-device, kernel-level
+
+
+def _swept_system(cols: int):
+    """SNAKE-like system whose per-core array is 8 x cols, with buffers
+    resized so (PE + SRAM) area stays at the 8x512 anchor budget."""
+    pes = 8 * cols
+    byts = max(16 * 1024, ANCHOR_BYTES + (ANCHOR_PES - pes) * BYTES_PER_MAC)
+    bufs = BufferConfig(weight=int(byts * 0.60), act=int(byts * 0.15),
+                        out=int(byts * 0.25))
+    base = snake_system()
+    sa = dataclasses.replace(base.substrate, name=f"sa-8x{cols}",
+                             phys_rows=8, phys_cols=cols, buffers=bufs,
+                             logical_row_options=(8,))
+    return dataclasses.replace(base, name=f"SNAKE-8x{cols}", substrate=sa)
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    spec = PAPER_MODELS["OPT-66B"]
+
+    # ---- (a) reallocation sweep -------------------------------------------
+    base_time = None
+    for cols in (128, 256, 384, 512, 640, 768):
+        sys = _swept_system(cols)
+        rep = decode_step(sys, spec, 8, CTX, tp=TP)
+        comp = sum(e.compute_s for e in rep.op_execs)
+        stall = sum(max(0.0, e.memory_s - e.compute_s)
+                    for e in rep.op_execs)
+        if cols == 128:
+            base_time = rep.time_s
+        rows.append(Row(f"fig4a/time_8x{cols}_norm", rep.time_s / base_time))
+        rows.append(Row(f"fig4a/stall_share_8x{cols}",
+                        stall / (comp + stall) if comp + stall else 0.0))
+        rows.append(Row(f"fig4a/energy_8x{cols}_j",
+                        rep.energy.logic_die_j))
+    # the paper's chosen configuration must be the fastest of the sweep
+    times = {c: decode_step(_swept_system(c), spec, 8, CTX, tp=TP).time_s
+             for c in (128, 256, 384, 512, 640, 768)}
+    best = min(times, key=times.get)
+    rows.append(Row("fig4a/best_cols", float(best), paper=512.0))
+
+    # ---- (b) dataflow preference by N-vs-K group ---------------------------
+    # §3.1's first-order rule concerns tile-switching / data-(re)loading
+    # amortization, so it is measured on the conventional (un-pipelined)
+    # execution model: preferred dataflow = argmin (cycles, tiles, dram).
+    lo = layer_ops_tp(spec, 8, CTX, TP)
+    sa: SystolicArrayConfig = snake_system().substrate
+    pus, cores = 16, 4
+    groups = {"ngtk": [], "klen": []}
+    for g in lo.projections:
+        if g.count != 1:
+            continue
+        # single-core tiles after the IS-S and OS-S spatial splits
+        for tile in (g.split_k(pus).split_n(cores),
+                     g.split_n(pus).split_k(cores)):
+            e_is = sa_gemm(tile, 8, 512, Dataflow.IS, sa.buffers, False)
+            e_os = sa_gemm(tile, 8, 512, Dataflow.OS, sa.buffers, False)
+            best = min((e_is, e_os),
+                       key=lambda e: (e.array_cycles, e.spatial_tiles,
+                                      e.dram_bytes))
+            key = "ngtk" if tile.n > tile.k else "klen"
+            groups[key].append(1.0 if best.dataflow == Dataflow.IS else 0.0)
+    rows.append(Row("fig4b/is_preferred_share_ngtk",
+                    sum(groups["ngtk"]) / max(1, len(groups["ngtk"])),
+                    note="N>K group: high -> IS preferred (paper)"))
+    rows.append(Row("fig4b/is_preferred_share_klen",
+                    sum(groups["klen"]) / max(1, len(groups["klen"])),
+                    note="N<=K group: low -> OS preferred (paper)"))
+    return rows

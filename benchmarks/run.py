@@ -1,0 +1,50 @@
+"""Benchmark harness entry point — one module per paper figure/table.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig12      # one module
+
+Prints ``name,us_per_call,derived[,paper=..][,note]`` CSV rows and dumps
+raw results to benchmarks/out/<module>.json.
+"""
+from __future__ import annotations
+
+import importlib
+import sys
+import time
+import traceback
+
+from benchmarks.common import emit
+
+MODULES = [
+    "fig1_roofline",       # Fig. 1a/b  roofline + Stratum execution split
+    "fig4_buffer_tradeoff",  # Fig. 4a/b  buffer->compute + dataflow pref
+    "fig11_area",          # Fig. 11    area / compute-area eff / power
+    "fig12_decode_perf",   # Fig. 12    decode speedup + energy efficiency
+    "fig13_scheduling",    # Fig. 13    mode distribution + fixed-mode slowdown
+    "fig14_array_shapes",  # Fig. 14    shape demand + buffer requirements
+    "fig10_serving",       # Fig. 10    serving E2E/TBT vs request rate
+    "kernel_bench",        # Pallas kernels vs oracles + chosen mappings
+    "tpu_roofline",        # deliverable (g): dry-run roofline table
+]
+
+
+def main() -> int:
+    only = sys.argv[1:] or None
+    failures = 0
+    for name in MODULES:
+        if only and not any(name.startswith(o) for o in only):
+            continue
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            t0 = time.time()
+            rows = mod.run()
+            emit(name, rows, time.time() - t0)
+        except Exception:
+            failures += 1
+            print(f"{name},0,NaN,ERROR")
+            traceback.print_exc()
+    return failures
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,68 @@
+"""TPU dry-run roofline table (deliverable g) — reads the JSON records the
+multi-pod dry-run wrote and prints the three-term roofline per (arch x
+shape) cell on the single-pod 16x16 mesh, plus the dominant bottleneck and
+the MODEL_FLOPS / HLO_FLOPs usefulness ratio.
+
+Run the sweep first:
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+from benchmarks.common import Row
+
+RESULTS = os.environ.get("REPRO_DRYRUN_OUT", "benchmarks/dryrun_results")
+
+
+def load_records(pattern: str = "dryrun_single_all_all.json") -> list:
+    path = os.path.join(RESULTS, pattern)
+    paths = [path] if os.path.exists(path) else \
+        sorted(glob.glob(os.path.join(RESULTS, "dryrun_single_*.json")))
+    best = {}
+    for p in paths:
+        try:
+            for r in json.load(open(p)):
+                key = (r.get("arch"), r.get("shape"))
+                if r.get("status") == "OK" or key not in best:
+                    best[key] = r
+        except Exception:
+            continue
+    return list(best.values())
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    recs = load_records()
+    n_ok = n_skip = n_fail = 0
+    for r in sorted(recs, key=lambda x: (str(x.get("arch")),
+                                         str(x.get("shape")))):
+        tag = f"{r.get('arch')}/{r.get('shape')}"
+        st = str(r.get("status"))
+        if st.startswith("SKIP"):
+            n_skip += 1
+            rows.append(Row(f"roofline/{tag}/skipped", 1.0, note=st[:40]))
+            continue
+        if st != "OK":
+            n_fail += 1
+            rows.append(Row(f"roofline/{tag}/failed", 1.0, note=st[:60]))
+            continue
+        n_ok += 1
+        tc, tm, tx = (r["t_compute_s"], r["t_memory_s"],
+                      r["t_collective_s"])
+        dom = max(tc, tm, tx)
+        rows.append(Row(f"roofline/{tag}/t_compute_s", tc))
+        rows.append(Row(f"roofline/{tag}/t_memory_s", tm))
+        rows.append(Row(f"roofline/{tag}/t_collective_s", tx))
+        rows.append(Row(f"roofline/{tag}/dominant_term_s", dom,
+                        note=r["bottleneck"]))
+        uf = r.get("useful_flops_fraction")
+        if uf is not None:
+            rows.append(Row(f"roofline/{tag}/useful_flops_fraction", uf))
+    rows.append(Row("roofline/cells_ok", float(n_ok)))
+    rows.append(Row("roofline/cells_skipped", float(n_skip)))
+    rows.append(Row("roofline/cells_failed", float(n_fail)))
+    return rows

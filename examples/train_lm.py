@@ -1,0 +1,73 @@
+"""End-to-end training driver: a ~100M-parameter dense LM trained for a few
+hundred steps with the full production path — sharded train step, ZeRO-1
+optimizer states, atomic checkpoints, resume, straggler detection.
+
+Default sizing (`--size 10m`) finishes on this CPU container in minutes;
+`--size 100m` is the full deliverable sizing for a beefier host or TPU.
+
+  PYTHONPATH=src python examples/train_lm.py --steps 200
+  PYTHONPATH=src python examples/train_lm.py --size 100m --steps 300
+"""
+import argparse
+import dataclasses
+
+from repro.launch.train import train
+from repro.models import registry
+
+SIZES = {
+    # ~9.8M params: d=256, 6L, ff=1024, vocab=8192
+    "10m": dict(d_model=256, num_layers=6, d_ff=1024, vocab=8192,
+                num_q_heads=8, num_kv_heads=4, d_head=32),
+    # ~101M params: d=640, 12L, ff=2560, vocab=16384
+    "100m": dict(d_model=640, num_layers=12, d_ff=2560, vocab=16384,
+                 num_q_heads=10, num_kv_heads=5, d_head=64),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", choices=list(SIZES), default="10m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    # register a custom-size dense config under the yi-6b (llama-arch) family
+    base = registry.get_config("yi-6b")
+    cfg = dataclasses.replace(base, name=f"lm-{args.size}",
+                              max_seq=args.seq, dtype="float32",
+                              **SIZES[args.size])
+    entry = registry.from_config(cfg)
+    import jax
+    n = sum(p.size for p in jax.tree.leaves(
+        jax.eval_shape(lambda: entry.module.init(jax.random.PRNGKey(0),
+                                                 cfg, 1))))
+    print(f"[train_lm] size={args.size}: {n / 1e6:.1f}M params, "
+          f"{args.steps} steps @ batch {args.global_batch} x seq {args.seq}")
+
+    # monkey-patch registry resolution so launch.train can drive it
+    registry._CUSTOM = {cfg.name: entry}
+    orig_get = registry.get
+
+    def patched_get(name, reduced=False, **over):
+        if name == cfg.name:
+            return entry
+        return orig_get(name, reduced=reduced, **over)
+
+    registry.get = patched_get
+    try:
+        out = train(cfg.name, steps=args.steps,
+                    global_batch=args.global_batch, seq=args.seq,
+                    ckpt_dir=args.ckpt_dir, save_every=50, reduced=False,
+                    log_every=10)
+    finally:
+        registry.get = orig_get
+    print(f"[train_lm] loss {out['first_loss']:.3f} -> "
+          f"{out['final_loss']:.3f} over {out['steps']} steps "
+          f"({out['wall_s']:.0f}s)")
+    assert out["final_loss"] < out["first_loss"], "loss must decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""Fault-tolerant checkpointing.
+
+Design (multi-host-ready, exercised single-process here):
+* step-tagged directories written ATOMICALLY (write to ``.tmp-<step>``, fsync
+  the manifest, then ``os.rename`` — a crash mid-save never corrupts the
+  latest checkpoint);
+* a JSON manifest stores treedef + shapes/dtypes, arrays go to one ``.npy``
+  per leaf (at multi-host scale each host writes only the shards it owns —
+  the manifest is mesh-independent, so restore can RE-SHARD onto a different
+  device count: elastic restart);
+* ``restore_latest`` + retention GC + an async (background-thread) mode so
+  the training loop never blocks on I/O.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = False):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ---- save ---------------------------------------------------------------
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None):
+        if self.async_save:
+            self.wait()  # one in flight at a time
+            host_tree = jax.tree.map(np.asarray, tree)  # snapshot now
+            self._thread = threading.Thread(
+                target=self._save_sync, args=(step, host_tree, extra))
+            self._thread.start()
+        else:
+            self._save_sync(step, tree, extra)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _save_sync(self, step: int, tree: Any, extra: Optional[dict]):
+        tmp = os.path.join(self.dir, f".tmp-{step}")
+        final = os.path.join(self.dir, f"step_{step:010d}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        flat = _flatten_with_paths(tree)
+        manifest = {"step": step, "extra": extra or {}, "leaves": {}}
+        for key, leaf in flat.items():
+            arr = np.asarray(leaf)
+            fname = key.replace("/", "__") + ".npy"
+            np.save(os.path.join(tmp, fname), arr)
+            manifest["leaves"][key] = {"file": fname,
+                                       "shape": list(arr.shape),
+                                       "dtype": str(arr.dtype)}
+        mpath = os.path.join(tmp, "manifest.json")
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    # ---- restore --------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_"):
+                out.append(int(d[len("step_"):]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: Any,
+                shardings: Any = None) -> Tuple[Any, dict]:
+        """Restore into the structure of ``like``; optionally device_put with
+        ``shardings`` (same treedef) — this is where elastic re-sharding
+        happens: the on-disk layout is mesh-independent."""
+        d = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        flat_like = _flatten_with_paths(like)
+        flat_sh = _flatten_with_paths(shardings) if shardings is not None \
+            else {k: None for k in flat_like}
+        restored = {}
+        for key, leaf in flat_like.items():
+            info = manifest["leaves"][key]
+            arr = np.load(os.path.join(d, info["file"]))
+            assert list(arr.shape) == list(leaf.shape), \
+                f"{key}: {arr.shape} vs {leaf.shape}"
+            if flat_sh.get(key) is not None:
+                restored[key] = jax.device_put(arr, flat_sh[key])
+            else:
+                restored[key] = jax.numpy.asarray(arr, dtype=leaf.dtype)
+        # rebuild pytree in like's structure
+        paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for path, _ in paths:
+            key = "/".join(_path_str(p) for p in path)
+            leaves.append(restored[key])
+        return jax.tree_util.tree_unflatten(treedef, leaves), \
+            manifest["extra"]
+
+    def restore_latest(self, like: Any, shardings: Any = None):
+        step = self.latest_step()
+        if step is None:
+            return None, None, None
+        tree, extra = self.restore(step, like, shardings)
+        return step, tree, extra

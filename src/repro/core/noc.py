@@ -1,0 +1,53 @@
+"""Lightweight logic-die NoC model (paper §4.1).
+
+The NoC connects the 16 PUs and is used only for coarse-grained collectives
+(all-reduce / all-gather / reduce-scatter) and MoE token dispatch.  We model
+ring collectives over the per-PU injection bandwidth (how such lightweight
+meshes are actually scheduled), plus a per-stage hop latency.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.hw import NMPSystem
+
+
+@dataclass(frozen=True)
+class CollectiveCost:
+    bytes_on_wire: int   # total bytes crossing NoC links
+    time_s: float
+
+
+def all_reduce(sys: NMPSystem, payload_bytes: int) -> CollectiveCost:
+    """Ring all-reduce of a payload replicated per PU: 2(P-1)/P bytes/PU."""
+    p = sys.pus
+    per_pu = 2 * (p - 1) / p * payload_bytes
+    t = (per_pu / sys.noc_link_bw_bytes
+         + 2 * (p - 1) * sys.noc_latency_cycles / sys.freq_hz)
+    return CollectiveCost(int(per_pu * p), t)
+
+
+def reduce_scatter(sys: NMPSystem, payload_bytes: int) -> CollectiveCost:
+    p = sys.pus
+    per_pu = (p - 1) / p * payload_bytes
+    t = (per_pu / sys.noc_link_bw_bytes
+         + (p - 1) * sys.noc_latency_cycles / sys.freq_hz)
+    return CollectiveCost(int(per_pu * p), t)
+
+
+def all_gather(sys: NMPSystem, shard_bytes: int) -> CollectiveCost:
+    """Each PU holds `shard_bytes`; result is P * shard_bytes everywhere."""
+    p = sys.pus
+    per_pu = (p - 1) * shard_bytes
+    t = (per_pu / sys.noc_link_bw_bytes
+         + (p - 1) * sys.noc_latency_cycles / sys.freq_hz)
+    return CollectiveCost(per_pu * p, t)
+
+
+def all_to_all(sys: NMPSystem, total_bytes: int) -> CollectiveCost:
+    """Token dispatch: every PU exchanges (P-1)/P of its 1/P share."""
+    p = sys.pus
+    per_pu = total_bytes / p * (p - 1) / p
+    t = (per_pu / sys.noc_link_bw_bytes
+         + (p - 1) * sys.noc_latency_cycles / sys.freq_hz)
+    return CollectiveCost(int(per_pu * p), t)

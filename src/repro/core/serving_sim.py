@@ -1,0 +1,144 @@
+"""Serving-level simulator (paper §6.4, Fig. 10; Duplex-style framework).
+
+Poisson request injection -> prefill on the xPU (H100) -> continuous-batching
+decode on the device under test (NMP substrate or GPU).  Reports end-to-end
+(E2E) latency and time-between-tokens (TBT) under varying request rates.
+
+Deterministic: arrivals use an explicit seeded generator (exponential gaps).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.gpu_model import gpu_decode_step
+from repro.core.hw import H100, GPUConfig, NMPSystem
+from repro.core.operators import ModelSpec
+from repro.core.pipeline import decode_step
+
+
+@dataclass
+class Request:
+    rid: int
+    arrival_s: float
+    input_len: int
+    output_len: int
+    prefill_done_s: float = math.inf
+    tokens_out: int = 0
+    finish_s: float = math.inf
+    token_times: List[float] = field(default_factory=list)
+
+
+@dataclass
+class ServingReport:
+    system: str
+    model: str
+    rate_req_s: float
+    e2e_mean_s: float
+    e2e_p90_s: float
+    tbt_mean_s: float
+    completed: int
+
+    def normalized_to(self, base: "ServingReport") -> Tuple[float, float]:
+        return (self.e2e_mean_s / base.e2e_mean_s,
+                self.tbt_mean_s / base.tbt_mean_s)
+
+
+def _prefill_time(spec: ModelSpec, input_len: int,
+                  gpu: GPUConfig = H100, n_gpus: int = 8) -> float:
+    flops = 2 * spec.active_params() * input_len
+    return flops / (gpu.peak_flops * 0.55 * n_gpus)
+
+
+class DecodeLatencyModel:
+    """Caches per-(batch, ctx-bucket) decode-iteration latency."""
+
+    def __init__(self, step_fn: Callable[[int, int], float],
+                 ctx_bucket: int = 1024):
+        self.step_fn = step_fn
+        self.ctx_bucket = ctx_bucket
+        self._cache: Dict[Tuple[int, int], float] = {}
+
+    def __call__(self, batch: int, ctx: int) -> float:
+        cb = max(self.ctx_bucket,
+                 ((ctx + self.ctx_bucket - 1) // self.ctx_bucket)
+                 * self.ctx_bucket)
+        key = (batch, cb)
+        if key not in self._cache:
+            self._cache[key] = self.step_fn(batch, cb)
+        return self._cache[key]
+
+
+def nmp_latency_model(sys: NMPSystem, spec: ModelSpec,
+                      tp: int = 1) -> DecodeLatencyModel:
+    return DecodeLatencyModel(
+        lambda b, c: decode_step(sys, spec, b, c, tp=tp).time_s)
+
+
+def gpu_latency_model(spec: ModelSpec, tp: int = 8) -> DecodeLatencyModel:
+    return DecodeLatencyModel(
+        lambda b, c: gpu_decode_step(spec, b, c, tp=tp).time_s)
+
+
+def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
+                     rate_req_s: float, *, system: str,
+                     n_requests: int = 128, input_len: int = 8192,
+                     output_len: int = 1024, max_batch: int = 64,
+                     seed: int = 0) -> ServingReport:
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_req_s, size=n_requests)
+    arrivals = np.cumsum(gaps)
+    reqs = [Request(i, float(arrivals[i]), input_len, output_len)
+            for i in range(n_requests)]
+
+    # --- prefill: single serialized H100x8 stream ---------------------------
+    t_pf = _prefill_time(spec, input_len)
+    t = 0.0
+    for r in reqs:
+        t = max(t, r.arrival_s) + t_pf
+        r.prefill_done_s = t
+
+    # --- continuous-batching decode -----------------------------------------
+    clock = 0.0
+    pending = sorted(reqs, key=lambda r: r.prefill_done_s)
+    active: List[Request] = []
+    done: List[Request] = []
+    pi = 0
+    while len(done) < n_requests:
+        while pi < n_requests and pending[pi].prefill_done_s <= clock \
+                and len(active) < max_batch:
+            active.append(pending[pi])
+            pi += 1
+        if not active:
+            clock = pending[pi].prefill_done_s
+            continue
+        ctx = int(np.mean([r.input_len + r.tokens_out for r in active]))
+        it = latency(len(active), ctx)
+        clock += it
+        still: List[Request] = []
+        for r in active:
+            r.tokens_out += 1
+            r.token_times.append(clock)
+            if r.tokens_out >= r.output_len:
+                r.finish_s = clock
+                done.append(r)
+            else:
+                still.append(r)
+        active = still
+
+    e2e = np.array([r.finish_s - r.arrival_s for r in done])
+    tbts = []
+    for r in done:
+        tt = np.asarray(r.token_times)
+        first = r.prefill_done_s
+        gaps_r = np.diff(np.concatenate([[first], tt]))
+        tbts.append(gaps_r.mean())
+    return ServingReport(system=system, model=spec.name,
+                         rate_req_s=rate_req_s,
+                         e2e_mean_s=float(e2e.mean()),
+                         e2e_p90_s=float(np.percentile(e2e, 90)),
+                         tbt_mean_s=float(np.mean(tbts)),
+                         completed=len(done))

@@ -1,0 +1,26 @@
+"""Distribution context: the active mesh for model-internal sharding hooks.
+
+Model code stays pure; when a mesh context is active, layers route to their
+distributed implementations (EP MoE, sequence-sharded decode attention).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+_state = threading.local()
+
+
+def current_mesh():
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    prev = current_mesh()
+    _state.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _state.mesh = prev

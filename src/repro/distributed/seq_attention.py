@@ -1,0 +1,65 @@
+"""Sequence-sharded decode attention under shard_map (paper IS-S, §5).
+
+The KV cache shards its context dimension S over the "model" mesh axis; each
+shard computes partial attention (un-normalized accumulator + log-sum-exp
+stats) over its S/P cached tokens with the flash-decode math, then shards
+combine EXACTLY via a psum of (acc * exp(m - m_max), l * exp(m - m_max)).
+This moves (B, Hq, D)-sized stats over ICI instead of the (B, S, Hkv, D)
+cache — the paper's observation that splitting the AV operator's K dimension
+(here: the context) is the right spatial partition for decode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.layers import decode_attention_core
+from repro.launch.mesh import data_axes
+
+
+def _local_partial(q, k_shard, v_shard, valid_shard):
+    acc, l, m = decode_attention_core(q, k_shard, v_shard, valid_shard)
+    return acc, l, m
+
+
+def make_seq_sharded_attn(mesh, axis: str = "model"):
+    """Returns attn_fn(q, k_cache, v_cache, lengths) -> (B, Hq, D) with the
+    cache S dim sharded over ``axis`` (layer-level: caches are (B,S,H,D))."""
+    daxes = data_axes(mesh)
+    dp = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+    p_size = mesh.shape[axis]
+
+    def attn(q, k_cache, v_cache, lengths):
+        b, s, hkv, d = k_cache.shape
+
+        def shard_fn(q, k, v, lengths):
+            # k/v: (B, S/P, Hkv, D) local shard; q replicated over `axis`
+            idx = lax.axis_index(axis)
+            s_local = k.shape[1]
+            start = idx * s_local
+            pos = start + jnp.arange(s_local)[None, :]
+            valid = pos < lengths[:, None]
+            acc, l, m = _local_partial(q, k, v, valid)
+            # exact combine: renormalize to the global max
+            m_max = lax.pmax(m, axis)
+            scale = jnp.exp(m - m_max)
+            acc = lax.psum(acc * scale[..., None], axis)
+            l = lax.psum(l * scale, axis)
+            out = acc / jnp.maximum(l, 1e-20)[..., None]
+            bq, hk, g, dd = out.shape
+            return out.reshape(bq, hk * g, dd).astype(q.dtype)
+
+        return jax.shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(dp, None, None), P(dp, axis, None, None),
+                      P(dp, axis, None, None), P(dp)),
+            out_specs=P(dp, None, None),
+            check_vma=False,
+        )(q, k_cache, v_cache, lengths)
+
+    return attn

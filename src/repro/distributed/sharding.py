@@ -1,0 +1,219 @@
+"""Sharding rules: parameter PartitionSpecs, batch/cache specs, ZeRO-1.
+
+Pattern-based: parameter paths map to Megatron-style TP layouts chosen by the
+planner's column/row rule (DESIGN.md §4), with divisibility checked against
+the actual mesh — any non-divisible dim degrades to replication rather than
+failing, and the degradation is visible in the returned spec table.
+
+Sequence-sharded decode caches implement the paper's IS-S on the attention
+context dimension: KV caches shard S over "model", batch over ("pod","data").
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return tuple(out)
+
+
+def _div(shape, dim, mesh, axis) -> bool:
+    return shape[dim] % int(np.prod([mesh.shape[a] for a in
+                                     (axis if isinstance(axis, tuple)
+                                      else (axis,))])) == 0
+
+
+def _spec(shape, mesh, *dims) -> P:
+    """Build a PartitionSpec, dropping non-divisible entries to None."""
+    entries = []
+    for d, ax in enumerate(dims):
+        if ax is None:
+            entries.append(None)
+        elif _div(shape, d, mesh, ax):
+            entries.append(ax)
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+def param_pspecs(params: Any, mesh) -> Any:
+    """PartitionSpec pytree matching ``params`` (works on ShapeDtypeStructs)."""
+
+    def rule(path, leaf) -> P:
+        names = _path_names(path)
+        last = names[-1]
+        shape = leaf.shape
+        nd = len(shape)
+        pre = (None,) * (nd - 2)  # stacked layer/group leading dims
+
+        def tail2(a, b):
+            return _spec(shape, mesh, *pre, a, b)
+
+        # ---- embeddings -----------------------------------------------------
+        if last == "table":
+            # d-sharded (not vocab-sharded): the token-id gather stays local
+            # per shard; vocab sharding makes GSPMD all-gather the full
+            # (V, d) table in f32 for every lookup (§Perf iteration 9)
+            return _spec(shape, mesh, None, "model")
+        if last == "head":
+            return _spec(shape, mesh, None, "model")
+        if last == "pos_dec":
+            return P(*([None] * nd))
+        # ---- attention -------------------------------------------------------
+        if last in ("wq", "wk", "wv"):
+            return tail2(None, "model")       # column-parallel (OS-S)
+        if last == "wo":
+            return tail2("model", None)       # row-parallel (IS-S)
+        if last in ("bq", "bk", "bv"):
+            return _spec(shape, mesh, *((None,) * (nd - 1)), "model")
+        # ---- MoE -------------------------------------------------------------
+        if "moe" in names:
+            if last == "router":
+                return P(*([None] * nd))
+            if last in ("w_up", "w_gate", "w_down") and "shared" not in names:
+                # (L, E, d, f): expert-parallel over model
+                return _spec(shape, mesh, *([None] * (nd - 3)), "model",
+                             None, None)
+        # ---- FFN / channel-mix ------------------------------------------------
+        if last in ("w_up", "w_gate", "w_in_x", "w_in_gate"):
+            return tail2(None, "model")
+        if last == "w_down":
+            return tail2("model", None)
+        if last == "w_out":
+            return tail2("model", None)
+        # ---- rwkv6 time/channel mix -------------------------------------------
+        if "cm" in names and last == "wk":
+            return tail2(None, "model")
+        if "cm" in names and last == "wv":
+            return tail2("model", None)
+        if last in ("wr", "wg"):
+            return tail2(None, "model") if "cm" not in names \
+                else P(*([None] * nd))
+        if last == "u_bonus":
+            return _spec(shape, mesh, *pre, "model", None)
+        # ---- rglru ----------------------------------------------------------
+        if last in ("conv_w",):
+            return _spec(shape, mesh, *pre, None, "model")
+        if last in ("conv_b",):
+            return _spec(shape, mesh, *((None,) * (nd - 1)), "model")
+        if last in ("w_a", "w_i"):
+            return tail2("model", None)
+        if last in ("lam", "b_a", "b_i"):
+            return _spec(shape, mesh, *((None,) * (nd - 1)), "model")
+        # ---- norms, biases, scalars ------------------------------------------
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def zero1_pspecs(param_specs: Any, params: Any, mesh) -> Any:
+    """Optimizer-state specs: the param spec + shard the first
+    still-replicated divisible dim over the data axis (ZeRO-1)."""
+    daxes = data_axes(mesh)
+    if not daxes:
+        return param_specs
+
+    def _uses_data(e) -> bool:
+        axes = e if isinstance(e, tuple) else (e,)
+        return any(a in daxes for a in axes if a)
+
+    def rule(spec: P, leaf) -> P:
+        entries = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        if any(_uses_data(e) for e in entries):
+            return P(*entries)          # already data-sharded (FSDP)
+        for d, e in enumerate(entries):
+            if e is None and _div(leaf.shape, d, mesh, daxes):
+                entries[d] = daxes if len(daxes) > 1 else daxes[0]
+                break
+        return P(*entries)
+
+    return jax.tree_util.tree_map(rule, param_specs, params)
+
+
+def fsdp_pspecs(param_specs: Any, params: Any, mesh) -> Any:
+    """FSDP / ZeRO-3 parameter sharding: same rule as ZeRO-1 applied to the
+    PARAMETERS themselves — the first still-replicated divisible dim shards
+    over the data axes.  Under the layer scan, XLA re-gathers exactly one
+    layer's weights at a time, so the transient all-gather replaces a
+    full-resident copy (TP-only residency exceeds a 16 GB chip for the
+    100B+ assigned architectures; see EXPERIMENTS.md §Perf iteration 4)."""
+    return zero1_pspecs(param_specs, params, mesh)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+def batch_pspecs(batch: Dict[str, Any], mesh) -> Dict[str, Any]:
+    daxes = data_axes(mesh)
+    dp = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+
+    def rule(path, leaf):
+        shape = leaf.shape
+        if not shape:
+            return P()
+        entries = [None] * len(shape)
+        if _div(shape, 0, mesh, daxes):
+            entries[0] = dp
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(rule, batch)
+
+
+def cache_pspecs(cache: Any, mesh) -> Any:
+    """KV caches: (L, B, S, Hkv, D) -> batch over data axes, SEQUENCE over
+    "model" (paper IS-S on the context dim).  Recurrent states: batch over
+    data, width/heads over model.  Non-divisible dims degrade to None."""
+    daxes = data_axes(mesh)
+    dp = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        shape = leaf.shape
+        nd = len(shape)
+        last = names[-1] if names else ""
+        if nd == 1:      # lengths
+            return _spec(shape, mesh, dp)
+        if last in ("k", "v", "self_k", "self_v", "cross_k", "cross_v",
+                    "k_cache", "v_cache"):
+            # (L, B, S, H, D)
+            return _spec(shape, mesh, None, dp, "model", None, None)
+        if last == "pos_cache":
+            return _spec(shape, mesh, None, dp, "model")
+        if last == "wkv":       # (L, B, H, hs, hs)
+            return _spec(shape, mesh, None, dp, "model", None, None)
+        if last in ("tm_x", "cm_x", "lru_h"):   # (L, B, d)
+            return _spec(shape, mesh, None, dp, "model")
+        if last == "conv":      # (L, B, cw-1, W)
+            return _spec(shape, mesh, None, dp, None, "model")
+        entries = [None] * nd
+        if nd >= 2 and _div(shape, 1, mesh, daxes):
+            entries[1] = dp
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(rule, cache)
+
+
+def to_named(tree_specs: Any, mesh) -> Any:
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
+                                  tree_specs,
+                                  is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,50 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels run with interpret=True; on real TPU
+set ``REPRO_PALLAS_INTERPRET=0`` (or rely on the default platform check).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode import flash_decode as _flash_decode
+from repro.kernels.snake_gemm import (GemmMapping, choose_mapping,
+                                      snake_decode_gemm as _snake_gemm)
+from repro.kernels.wkv6 import wkv6 as _wkv6
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_gemm(a: jax.Array, b: jax.Array, interpret: bool = None):
+    """Shape-adaptive small-M GEMM: a (M, K) @ b (K, N)."""
+    interp = _interpret() if interpret is None else interpret
+    return _snake_gemm(a, b, interpret=interp)
+
+
+def decode_gemm_mapping(m: int, n: int, k: int, dtype=jnp.bfloat16):
+    return choose_mapping(m, n, k, dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def attention_decode(q, k, v, lengths, block_s: int = 512,
+                     interpret: bool = None):
+    """GQA flash-decode: q (B,Hq,D) against (B,S,Hkv,D) caches."""
+    interp = _interpret() if interpret is None else interpret
+    return _flash_decode(q, k, v, lengths, block_s=block_s, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wkv6_scan(r, k, v, w, u, state0, interpret: bool = None):
+    """RWKV6 recurrence with VMEM-resident state."""
+    interp = _interpret() if interpret is None else interpret
+    return _wkv6(r, k, v, w, u, state0, interpret=interp)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_gemm_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """a: (M, K), b: (K, N) -> (M, N), f32 accumulation."""
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32)
+                   ).astype(a.dtype)
+
+
+def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array) -> jax.Array:
+    """q: (B, Hq, D); k/v: (B, S, Hkv, D); lengths: (B,) -> (B, Hq, D).
+
+    GQA decode attention with per-request valid prefix, f32 softmax.
+    """
+    b, hq, d = q.shape
+    _, s, hkv, _ = k.shape
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    qr = q.reshape(b, hkv, g, d).astype(jnp.float32) * scale
+    scores = jnp.einsum("bhgd,bshd->bhgs", qr, k.astype(jnp.float32))
+    valid = (jnp.arange(s)[None, :] < lengths[:, None])[:, None, None, :]
+    scores = jnp.where(valid, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", w, v.astype(jnp.float32))
+    return out.reshape(b, hq, d).astype(q.dtype)
+
+
+def wkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+             u: jax.Array, state0: jax.Array):
+    """RWKV6 recurrence oracle.
+
+    r/k/v/w: (B, T, H, hs); u: (H, hs); state0: (B, H, hs, hs).
+    Returns (y: (B, T, H, hs), state_T).
+        y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+        S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    def step(s, xs):
+        rt, kt, vt, wt = xs
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(x.astype(jnp.float32), 1, 0)
+               for x in (r, k, v, w))
+    sT, y = jax.lax.scan(step, state0.astype(jnp.float32), xs)
+    return jnp.moveaxis(y, 0, 1), sT

@@ -1,0 +1,160 @@
+"""SNAKE decode GEMM — shape-adaptive small-M matmul Pallas kernel.
+
+TPU adaptation of the paper's reconfigurable systolic array (§4.2, DESIGN.md
+§4).  The physical fabric (MXU) is fixed; what we reconfigure per operator
+shape is the *mapping*:
+
+* "logical array shape"  -> VMEM block shape: M is padded only to the sublane
+  granularity (8 f32 / 16 bf16 — the analogue of SNAKE's reconfiguration
+  granularity of 8) and the freed VMEM budget goes to wide N/K blocks, which
+  is exactly the paper's 8x512-style elongation;
+* "dataflow"             -> grid order + residency:
+    IS (input-stationary):  the whole (M, K) activation stays resident in
+        VMEM, B streams one N-block per grid step, one full-K dot each —
+        chosen when N > K and A+B blocks fit VMEM (paper's rule);
+    OS (output-stationary): an f32 (M, bn) accumulator stays resident in a
+        VMEM scratch while K streams in blocks — chosen when K is too large
+        to hold (K temporal = paper's OS).
+
+Both mappings share one kernel body structure, mirroring how SNAKE's OS/IS
+share the PE fabric and differ only in boundary injection.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128
+VMEM_BUDGET = 12 * 1024 * 1024   # leave headroom below the 16 MB/core VMEM
+
+
+def _sublane(dtype) -> int:
+    return 16 if dtype in (jnp.bfloat16, jnp.dtype(jnp.bfloat16)) else 8
+
+
+def _round_up(x: int, g: int) -> int:
+    return -(-x // g) * g
+
+
+@dataclass(frozen=True)
+class GemmMapping:
+    dataflow: str        # "IS" | "OS"
+    block_m: int
+    block_n: int
+    block_k: int         # == K for IS
+
+    @property
+    def grid(self) -> Tuple[int, ...]:
+        raise NotImplementedError
+
+
+def choose_mapping(m: int, n: int, k: int, dtype=jnp.bfloat16) -> GemmMapping:
+    """The paper's §3.1 first-order rule, restated in VMEM terms."""
+    bm = _round_up(max(1, m), _sublane(dtype))
+    esize = jnp.dtype(dtype).itemsize
+    # IS feasibility: resident A (bm x K) + streamed B (K x bn) + out
+    bn = LANE
+    while True:
+        nxt = bn * 2
+        if (bm * k + k * nxt + bm * nxt) * esize + bm * nxt * 4 > VMEM_BUDGET:
+            break
+        if nxt > _round_up(n, LANE):
+            break
+        bn = nxt
+    is_feasible = (bm * k + k * bn + bm * bn) * esize <= VMEM_BUDGET
+    if is_feasible and n > k:
+        return GemmMapping("IS", bm, bn, k)
+    # OS: block K; accumulator (bm x bn) f32 resident
+    bk = min(_round_up(k, LANE), 2048)
+    bn = LANE
+    while True:
+        nxt = bn * 2
+        if ((bm * bk + bk * nxt) * esize + bm * nxt * 4) > VMEM_BUDGET:
+            break
+        if nxt > _round_up(n, LANE):
+            break
+        bn = nxt
+    return GemmMapping("OS", bm, bn, bk)
+
+
+# ---------------------------------------------------------------------------
+# Kernels
+# ---------------------------------------------------------------------------
+def _is_kernel(a_ref, b_ref, o_ref):
+    """Input-stationary: full-K dot per N block; A resident across grid."""
+    o_ref[...] = lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def _os_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
+    """Output-stationary: f32 accumulator resident while K streams."""
+    kk = pl.program_id(1)
+
+    @pl.when(kk == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(kk == k_steps - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def snake_decode_gemm(a: jax.Array, b: jax.Array,
+                      mapping: Optional[GemmMapping] = None,
+                      interpret: bool = False) -> jax.Array:
+    """a: (M, K) @ b: (K, N) -> (M, N) with shape-adaptive mapping."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    dtype = a.dtype
+    mp = mapping or choose_mapping(m, n, k, dtype)
+    bm = mp.block_m
+    # pad every dim to its block multiple (M to sublane granularity = the
+    # SNAKE reconfiguration granularity; N/K to the lane width)
+    mp_pad = _round_up(m, bm)
+    np_ = _round_up(n, mp.block_n)
+    kp = _round_up(k, mp.block_k if mp.dataflow == "OS" else LANE)
+    a_p = jnp.pad(a, ((0, mp_pad - m), (0, kp - k)))
+    b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+
+    if mp.dataflow == "IS":
+        grid = (np_ // mp.block_n,)
+        out = pl.pallas_call(
+            _is_kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((mp_pad, kp), lambda i: (0, 0)),
+                pl.BlockSpec((kp, mp.block_n), lambda i: (0, i)),
+            ],
+            out_specs=pl.BlockSpec((mp_pad, mp.block_n), lambda i: (0, i)),
+            out_shape=jax.ShapeDtypeStruct((mp_pad, np_), dtype),
+            interpret=interpret,
+        )(a_p, b_p)
+    else:
+        k_steps = kp // mp.block_k
+        grid = (np_ // mp.block_n, k_steps)
+        out = pl.pallas_call(
+            functools.partial(_os_kernel, k_steps=k_steps),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((mp_pad, mp.block_k), lambda i, j: (0, j)),
+                pl.BlockSpec((mp.block_k, mp.block_n), lambda i, j: (j, i)),
+            ],
+            out_specs=pl.BlockSpec((mp_pad, mp.block_n), lambda i, j: (0, i)),
+            out_shape=jax.ShapeDtypeStruct((mp_pad, np_), dtype),
+            scratch_shapes=[pltpu.VMEM((mp_pad, mp.block_n), jnp.float32)],
+            interpret=interpret,
+        )(a_p, b_p)
+    return out[:m, :n]

@@ -1,0 +1,81 @@
+"""WKV6 recurrence Pallas kernel (RWKV6 time-mix core).
+
+The paper's unified substrate routes auxiliary tensor ops to the vector core
+with the SA's output buffer as its working store (§3.3/§4.2.3).  The TPU
+analogue for the WKV recurrence is keeping the (hs x hs) per-head state
+RESIDENT IN VMEM for the whole sequence sweep — the jnp.scan reference
+round-trips the state through HBM every step, so the kernel removes
+T * hs^2 * 8 bytes of HBM traffic per head (the memory-roofline term).
+
+Grid: (B, H) — head-level parallelism, exactly the paper's attention/head
+mapping across PUs.  Inside: a sequential fori_loop over T (the recurrence
+is inherently serial in its dependency; the chunk-parallel reformulation is
+a recorded future optimization in EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref,
+            s_scr, *, t_len: int):
+    s_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)             # (1, hs) row
+
+    def step(t, _):
+        rt = r_ref[0, 0, pl.ds(t, 1)].astype(jnp.float32)   # (1, hs)
+        kt = k_ref[0, 0, pl.ds(t, 1)].astype(jnp.float32)
+        vt = v_ref[0, 0, pl.ds(t, 1)].astype(jnp.float32)
+        wt = w_ref[0, 0, pl.ds(t, 1)].astype(jnp.float32)
+        kv = lax.dot_general(kt, vt, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (hs, hs)
+        s = s_scr[...]
+        y = lax.dot_general(rt, s + u.T * kv, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (1, hs)
+        y_ref[0, 0, pl.ds(t, 1)] = y.astype(y_ref.dtype)
+        s_scr[...] = wt.T * s + kv
+        return _
+
+    lax.fori_loop(0, t_len, step, None)
+    sT_ref[0, 0] = s_scr[...].astype(sT_ref.dtype)
+
+
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+         u: jax.Array, state0: jax.Array, interpret: bool = False):
+    """r/k/v/w: (B, T, H, hs); u: (H, hs); state0: (B, H, hs, hs).
+
+    Returns (y: (B, T, H, hs), state_T: (B, H, hs, hs)).
+    """
+    b, t, h, hs = r.shape
+    tr = lambda x: jnp.moveaxis(x, 2, 1)           # (B, H, T, hs)
+    rt_, kt_, vt_, wt_ = tr(r), tr(k), tr(v), tr(w)
+
+    y, sT = pl.pallas_call(
+        functools.partial(_kernel, t_len=t),
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, t, hs), lambda bi, hi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, t, hs), lambda bi, hi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, t, hs), lambda bi, hi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, t, hs), lambda bi, hi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, hs), lambda bi, hi: (hi, 0)),
+            pl.BlockSpec((1, 1, hs, hs), lambda bi, hi: (bi, hi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, t, hs), lambda bi, hi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, hs, hs), lambda bi, hi: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, t, hs), r.dtype),
+            jax.ShapeDtypeStruct((b, h, hs, hs), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hs, hs), jnp.float32)],
+        interpret=interpret,
+    )(rt_, kt_, vt_, wt_, u, state0)
+    return jnp.moveaxis(y, 1, 2), sT

@@ -1,0 +1,46 @@
+"""Serving driver: continuous-batching decode on the real model.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
+      --rate 4 --n-requests 12 --prompt-len 32
+
+``--pallas`` routes decode attention through the flash-decode Pallas kernel
+(interpret mode on CPU, compiled on TPU).
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.models import registry
+from repro.serving.engine import EngineConfig, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=registry.ARCH_IDS + registry.EXTRA_ARCH_IDS, default="yi-6b")
+    ap.add_argument("--rate", type=float, default=4.0)
+    ap.add_argument("--n-requests", type=int, default=12)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--pallas", action="store_true",
+                    help="flash-decode Pallas kernel for decode attention")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="Sarathi-style chunked prefill")
+    args = ap.parse_args()
+
+    entry = registry.get(args.arch, reduced=not args.full)
+    ecfg = EngineConfig(max_batch=args.max_batch,
+                        max_seq=args.prompt_len + args.max_new + 2,
+                        max_new_tokens=args.max_new,
+                        use_pallas_decode=args.pallas,
+                        prefill_chunk=args.prefill_chunk)
+    eng = ServingEngine(entry, ecfg)
+    metrics = eng.run_workload(rate_req_s=args.rate,
+                               n_requests=args.n_requests,
+                               prompt_len=args.prompt_len)
+    print(f"[serve] {args.arch}: {metrics}")
+
+
+if __name__ == "__main__":
+    main()

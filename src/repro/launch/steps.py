@@ -1,0 +1,213 @@
+"""Step-function builders: pure train/prefill/serve steps + their sharding.
+
+These are what both the real drivers (train.py / serve.py) and the multi-pod
+dry-run lower.  All assembly is mesh-parameterized; tp = mesh model size.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed import context
+from repro.distributed.seq_attention import make_seq_sharded_attn
+from repro.distributed.sharding import (batch_pspecs, cache_pspecs,
+                                        fsdp_pspecs, param_pspecs, to_named,
+                                        zero1_pspecs)
+from repro.models import registry
+from repro.models.config import SHAPES, ArchConfig, ShapeCell
+from repro.optim import adamw as axw
+
+
+def make_train_step(entry: registry.ArchEntry, ocfg: axw.AdamWConfig,
+                    tp: int, mesh=None, microbatch: int = 1) -> Callable:
+    """``microbatch`` > 1 runs gradient accumulation over that many
+    sequential microbatches (f32 accumulator) — divides the activation
+    working set at the cost of re-running the forward pass per slice."""
+    cfg, mod = entry.config, entry.module
+
+    def train_step(params, opt_state, batch):
+        with context.use_mesh(mesh):
+            if microbatch > 1:
+                from repro.models import layers as _L
+                _L._EMBED_CONSTRAINT[0] = False   # trace-time toggle
+                mbs = jax.tree.map(
+                    lambda x: x.reshape(microbatch,
+                                        x.shape[0] // microbatch,
+                                        *x.shape[1:]), batch)
+
+                def acc(carry, mb):
+                    lsum, gsum = carry
+                    l, g = jax.value_and_grad(
+                        lambda p: mod.loss(p, cfg, mb, tp=tp))(params)
+                    gsum = jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                    return (lsum + l, gsum), None
+
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                try:
+                    (loss, grads), _ = jax.lax.scan(
+                        acc, (jnp.float32(0.0), zeros), mbs)
+                finally:
+                    _L._EMBED_CONSTRAINT[0] = True
+                loss = loss / microbatch
+                grads = jax.tree.map(lambda g: g / microbatch, grads)
+            else:
+                loss, grads = jax.value_and_grad(
+                    lambda p: mod.loss(p, cfg, batch, tp=tp))(params)
+        params, opt_state, metrics = axw.update(grads, opt_state, params,
+                                                ocfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(entry: registry.ArchEntry, tp: int, mesh=None,
+                      max_seq: Optional[int] = None,
+                      chunk: Optional[int] = None) -> Callable:
+    """``chunk``: Sarathi-style chunked prefill for the transformer
+    families — bounds peak activation memory to one chunk."""
+    cfg, mod = entry.config, entry.module
+
+    def prefill_step(params, inputs: Dict[str, Any]):
+        with context.use_mesh(mesh):
+            if cfg.family == "audio":
+                return mod.prefill(params, cfg, inputs["tokens"],
+                                   frames=inputs["frames"], tp=tp,
+                                   max_seq=max_seq)
+            if cfg.family == "vlm":
+                return mod.prefill(params, cfg, None,
+                                   embeds=inputs["embeds"], tp=tp,
+                                   max_seq=max_seq)
+            if cfg.family in ("ssm", "hybrid"):
+                return mod.prefill(params, cfg, inputs["tokens"], tp=tp)
+            return mod.prefill(params, cfg, inputs["tokens"], tp=tp,
+                               max_seq=max_seq, chunk=chunk)
+
+    return prefill_step
+
+
+def make_serve_step(entry: registry.ArchEntry, tp: int, mesh=None,
+                    seq_sharded_attn: bool = False) -> Callable:
+    cfg, mod = entry.config, entry.module
+    attn_fn = None
+    if seq_sharded_attn and mesh is not None and cfg.family in ("dense",
+                                                                "moe", "vlm"):
+        attn_fn = make_seq_sharded_attn(mesh)
+
+    def serve_step(params, cache, tokens):
+        with context.use_mesh(mesh):
+            if cfg.family in ("dense", "moe", "vlm") and attn_fn is not None:
+                return mod.decode_step(params, cfg, tokens, cache, tp=tp,
+                                       attn_fn=attn_fn)
+            return mod.decode_step(params, cfg, tokens, cache, tp=tp)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding assembly
+# ---------------------------------------------------------------------------
+def assemble_shardings(entry: registry.ArchEntry, mesh, kind: str,
+                       shape: ShapeCell, ocfg: Optional[axw.AdamWConfig]
+                       = None, fsdp: bool = True):
+    """Returns (arg_sds, in_shardings, out_shardings) for one cell.
+
+    ``fsdp``: additionally shard parameters over the data axes (ZeRO-3) —
+    required for the 100B+ archs to fit 16 GB/chip; the layer scan re-gathers
+    one layer's weights at a time.
+    """
+    cfg = entry.config
+    tp = mesh.shape["model"]
+    params_sds = jax.eval_shape(
+        lambda: entry.module.init(jax.random.PRNGKey(0), cfg, tp))
+    pspec = param_pspecs(params_sds, mesh)
+    if fsdp:
+        # FSDP re-gathers weights at every use — only worth it when the
+        # TP-only residency threatens the 16 GB chip (§Perf iterations
+        # 12/15).  Serving residency = params; training adds ~4x of f32
+        # optimizer moments (already ZeRO-1-sharded over data, so they
+        # count /dsize).
+        pbytes = sum(l.size * l.dtype.itemsize
+                     for l in jax.tree.leaves(params_sds)) / tp
+        if kind == "train":
+            import numpy as _np
+            from repro.launch.mesh import data_axes
+            dsize = int(_np.prod([mesh.shape[a] for a in data_axes(mesh)])
+                        ) or 1
+            n_par = sum(l.size for l in jax.tree.leaves(params_sds))
+            resid = pbytes + 8.0 * n_par / tp / dsize   # f32 mu+nu, ZeRO-1
+        else:
+            resid = pbytes
+        fsdp = resid > 8 * 2**30
+    if fsdp:
+        pspec = fsdp_pspecs(pspec, params_sds, mesh)
+    psh = to_named(pspec, mesh)
+    rep = NamedSharding(mesh, P())
+    inputs_sds = registry.input_specs(cfg, shape, tp)
+    bsh = to_named(batch_pspecs(inputs_sds, mesh), mesh)
+
+    if kind == "train":
+        ocfg = ocfg or axw.AdamWConfig()
+        opt_sds = jax.eval_shape(lambda: axw.init(params_sds, ocfg))
+        z1 = to_named(zero1_pspecs(pspec, params_sds, mesh), mesh)
+        osh = axw.AdamWState(rep, z1, z1, z1 if ocfg.compress_grads else None)
+        args = (params_sds, opt_sds, inputs_sds)
+        in_sh = (psh, osh, bsh)
+        out_sh = (psh, osh, rep)
+        return args, in_sh, out_sh
+
+    if kind == "prefill":
+        cache_sds = registry.cache_specs(entry, shape, tp)
+        csh = to_named(cache_pspecs(cache_sds, mesh), mesh)
+        args = (params_sds, inputs_sds)
+        in_sh = (psh, bsh)
+        out_sh = (rep, csh)   # last-token logits replicated; cache sharded
+        return args, in_sh, out_sh
+
+    # decode
+    cache_sds = registry.cache_specs(entry, shape, tp)
+    csh = to_named(cache_pspecs(cache_sds, mesh), mesh)
+    tok_sds = registry.input_specs(cfg, shape, tp)["tokens"]
+    tsh = to_named(batch_pspecs({"tokens": tok_sds}, mesh), mesh)["tokens"]
+    args = (params_sds, cache_sds, tok_sds)
+    in_sh = (psh, csh, tsh)
+    logits_spec = P()
+    b = shape.global_batch
+    from repro.launch.mesh import data_axes
+    daxes = data_axes(mesh)
+    import numpy as np
+    if daxes and b % int(np.prod([mesh.shape[a] for a in daxes])) == 0:
+        logits_spec = P(daxes if len(daxes) > 1 else daxes[0], None)
+    out_sh = (NamedSharding(mesh, logits_spec), csh)
+    return args, in_sh, out_sh
+
+
+def build_cell(entry: registry.ArchEntry, mesh, shape: ShapeCell,
+               seq_sharded_attn: bool = False,
+               ocfg: Optional[axw.AdamWConfig] = None,
+               remat: bool = True, microbatch: int = 1,
+               prefill_chunk: Optional[int] = None):
+    """(jit_fn, arg_sds) ready to .lower(*arg_sds) for one dry-run cell."""
+    tp = mesh.shape["model"]
+    kind = shape.kind
+    args, in_sh, out_sh = assemble_shardings(entry, mesh, kind, shape, ocfg)
+    if kind == "train":
+        fn = make_train_step(entry, ocfg or axw.AdamWConfig(), tp, mesh,
+                             microbatch=microbatch)
+        donate = (0, 1)
+    elif kind == "prefill":
+        fn = make_prefill_step(entry, tp, mesh, max_seq=shape.seq_len,
+                               chunk=prefill_chunk)
+        donate = ()
+    else:
+        fn = make_serve_step(entry, tp, mesh,
+                             seq_sharded_attn=seq_sharded_attn)
+        donate = (1,)
+    jf = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                 donate_argnums=donate)
+    return jf, args

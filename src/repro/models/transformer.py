@@ -1,0 +1,290 @@
+"""Decoder-only transformer LM (dense / MoE / VLM-text families).
+
+Pure-functional: ``init`` builds a stacked-parameter pytree (layer dim
+leading, consumed by ``lax.scan``), ``loss`` / ``prefill`` / ``decode_step``
+are jit-able pure functions.  The VLM family accepts precomputed patch
+embeddings (frontend stub per the assignment) and M-RoPE positions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.config import ArchConfig
+
+Params = Dict[str, Any]
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (L, B, S, Hkv, D)
+    v: jax.Array
+    lengths: jax.Array    # (B,) valid prefix per request
+
+    @staticmethod
+    def zeros(cfg: ArchConfig, batch: int, max_seq: int, tp: int = 1,
+              dtype=None):
+        _, hkv = cfg.padded_heads(tp)
+        dt = dtype or L._dtype(cfg.dtype)
+        shape = (cfg.num_layers, batch, max_seq, hkv, cfg.d_head)
+        return KVCache(jnp.zeros(shape, dt), jnp.zeros(shape, dt),
+                       jnp.zeros((batch,), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _init_layer(key, cfg: ArchConfig, dtype, hq, hkv) -> Params:
+    ka, kf, kn = jax.random.split(key, 3)
+    p = {
+        "ln1": L.init_norm(cfg.norm, cfg.d_model),
+        "attn": L.init_attention(ka, cfg, dtype, hq, hkv),
+        "ln2": L.init_norm(cfg.norm, cfg.d_model),
+    }
+    if cfg.num_experts:
+        p["moe"] = L.init_moe(kf, cfg, dtype)
+    else:
+        p["ffn"] = L.init_ffn(kf, cfg.d_model, cfg.d_ff, cfg.gated_ffn,
+                              dtype, cfg.num_layers)
+    return p
+
+
+def init(key, cfg: ArchConfig, tp: int = 1) -> Params:
+    dtype = L._dtype(cfg.dtype)
+    hq, hkv = cfg.padded_heads(tp)
+    ke, kl = jax.random.split(key)
+    layer_keys = jax.random.split(kl, cfg.num_layers)
+    blocks = jax.vmap(lambda k: _init_layer(k, cfg, dtype, hq, hkv))(
+        layer_keys)
+    return {
+        "embed": L.init_embed(ke, cfg.padded_vocab(tp), cfg.d_model, dtype,
+                              cfg.tie_embeddings),
+        "blocks": blocks,
+        "ln_f": L.init_norm(cfg.norm, cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill): scan over stacked layers
+# ---------------------------------------------------------------------------
+def _block_seq(cfg: ArchConfig, lp: Params, x: jax.Array,
+               positions: jax.Array, hq: int, hkv: int,
+               window: int = 0) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """One decoder block over a full sequence. Returns (x, (k, v))."""
+    h = L.apply_norm(cfg.norm, lp["ln1"], x)
+    q, k, v = L.qkv_project(lp["attn"], h, hq, hkv, cfg.d_head)
+    q = L.apply_rope(q, positions, cfg.rope_theta,
+                     cfg.mrope_sections if cfg.mrope else None)
+    k = L.apply_rope(k, positions, cfg.rope_theta,
+                     cfg.mrope_sections if cfg.mrope else None)
+    attn = L.blocked_attention(q, k, v, causal=True, window=window)
+    b, s, _, _ = attn.shape
+    x = x + attn.reshape(b, s, hq * cfg.d_head) @ lp["attn"]["wo"]
+    h = L.apply_norm(cfg.norm, lp["ln2"], x)
+    if cfg.num_experts:
+        y = L.apply_moe(lp["moe"], h.reshape(b * s, cfg.d_model), cfg)
+        y = y.reshape(b, s, cfg.d_model)
+    else:
+        y = L.apply_ffn(lp["ffn"], h, cfg.act)
+    return x + y, (k, v)
+
+
+def forward_seq(params: Params, cfg: ArchConfig, tokens: Optional[jax.Array],
+                positions: Optional[jax.Array] = None,
+                embeds: Optional[jax.Array] = None, tp: int = 1,
+                collect_cache: bool = False, remat: bool = True):
+    """Full-sequence forward. Returns (hidden, (k_stack, v_stack) | None)."""
+    hq, hkv = cfg.padded_heads(tp)
+    x = embeds if embeds is not None else L.embed(params["embed"], tokens)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        if cfg.mrope:
+            positions = jnp.broadcast_to(positions[..., None], (b, s, 3))
+
+    def block(x, lp):
+        # sequence-parallel carry: the remat save per layer shards S over
+        # "model" (no-op off-mesh / non-divisible)
+        x = L.seq_constraint(x)
+        y, kv = _block_seq(cfg, lp, x, positions, hq, hkv,
+                           window=cfg.window)
+        return L.seq_constraint(y), kv
+
+    if remat:
+        block = jax.checkpoint(block)
+
+    if collect_cache:
+        x, kv = lax.scan(block, x, params["blocks"],
+                         unroll=cfg.scan_unroll)
+    else:
+        def block_nocache(x, lp):
+            y, _ = block(x, lp)
+            return y, None
+        x, kv = lax.scan(block_nocache, x, params["blocks"],
+                         unroll=cfg.scan_unroll)
+    x = L.apply_norm(cfg.norm, params["ln_f"], x)
+    return x, kv
+
+
+def loss(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+         tp: int = 1) -> jax.Array:
+    h, _ = forward_seq(params, cfg, batch.get("tokens"),
+                       positions=batch.get("positions"),
+                       embeds=batch.get("embeds"), tp=tp)
+    return L.lm_loss_chunked(params["embed"], h, batch["labels"],
+                             batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode
+# ---------------------------------------------------------------------------
+def prefill(params: Params, cfg: ArchConfig, tokens: jax.Array,
+            tp: int = 1, embeds: Optional[jax.Array] = None,
+            max_seq: Optional[int] = None, chunk: Optional[int] = None):
+    """Process the prompt; returns (last_logits, KVCache).
+
+    ``chunk`` enables Sarathi-style chunked prefill (the paper's ref [1]):
+    the prompt is processed ``chunk`` tokens at a time against the growing
+    KV cache, bounding peak activation memory to one chunk's working set.
+    """
+    b, s = (tokens.shape if tokens is not None else embeds.shape[:2])
+    if chunk is not None and s > chunk and s % chunk == 0 \
+            and embeds is None:
+        return _prefill_chunked(params, cfg, tokens, tp, max_seq, chunk)
+    h, kv = forward_seq(params, cfg, tokens, embeds=embeds, tp=tp,
+                        collect_cache=True, remat=False)
+    k, v = kv
+    if max_seq is not None and max_seq > s:
+        pad = [(0, 0), (0, 0), (0, max_seq - s), (0, 0), (0, 0)]
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    cache = KVCache(k, v, jnp.full((b,), s, jnp.int32))
+    logits = L.unembed(params["embed"], h[:, -1])
+    return logits, cache
+
+
+def _prefill_chunked(params: Params, cfg: ArchConfig, tokens: jax.Array,
+                     tp: int, max_seq: Optional[int], chunk: int):
+    """Chunked prefill: outer fori over chunks, inner fori over layers,
+    in-place cache writes (same structure as decode_step, multi-token)."""
+    hq, hkv = cfg.padded_heads(tp)
+    b, s = tokens.shape
+    total = max(max_seq or s, s)
+    cache0 = KVCache.zeros(cfg, b, total, tp)
+    n_chunks = s // chunk
+
+    def chunk_body(ci, carry):
+        kc_all, vc_all, h_last = carry
+        toks = lax.dynamic_slice_in_dim(tokens, ci * chunk, chunk, axis=1)
+        x = L.embed(params["embed"], toks)                # (B, C, d)
+        pos = ci * chunk + jnp.arange(chunk)
+        positions = jnp.broadcast_to(pos[None, :], (b, chunk))
+        if cfg.mrope:
+            positions = jnp.broadcast_to(positions[..., None],
+                                         (b, chunk, 3))
+
+        def layer_body(li, inner):
+            x, kc_all, vc_all = inner
+            lp = jax.tree.map(
+                lambda a: lax.dynamic_index_in_dim(a, li, 0,
+                                                   keepdims=False),
+                params["blocks"])
+            h = L.apply_norm(cfg.norm, lp["ln1"], x)
+            q, k, v = L.qkv_project(lp["attn"], h, hq, hkv, cfg.d_head)
+            q = L.apply_rope(q, positions, cfg.rope_theta,
+                             cfg.mrope_sections if cfg.mrope else None)
+            k = L.apply_rope(k, positions, cfg.rope_theta,
+                             cfg.mrope_sections if cfg.mrope else None)
+            kc = lax.dynamic_index_in_dim(kc_all, li, 0, keepdims=False)
+            vc = lax.dynamic_index_in_dim(vc_all, li, 0, keepdims=False)
+            kc = lax.dynamic_update_slice(kc, k, (0, ci * chunk, 0, 0))
+            vc = lax.dynamic_update_slice(vc, v, (0, ci * chunk, 0, 0))
+            # chunk queries attend over the whole cache buffer; the causal
+            # mask (q_offset) blanks everything past the current position,
+            # including the still-zero future slots
+            attn = L.blocked_attention(q, kc, vc, causal=True,
+                                       window=cfg.window,
+                                       q_offset=ci * chunk)
+            x = x + attn.reshape(b, chunk, hq * cfg.d_head) \
+                @ lp["attn"]["wo"]
+            h2 = L.apply_norm(cfg.norm, lp["ln2"], x)
+            if cfg.num_experts:
+                y = L.apply_moe(lp["moe"], h2.reshape(b * chunk,
+                                                      cfg.d_model), cfg)
+                y = y.reshape(b, chunk, cfg.d_model)
+            else:
+                y = L.apply_ffn(lp["ffn"], h2, cfg.act)
+            kc_all = lax.dynamic_update_index_in_dim(kc_all, kc, li, 0)
+            vc_all = lax.dynamic_update_index_in_dim(vc_all, vc, li, 0)
+            return (x + y, kc_all, vc_all)
+
+        x, kc_all, vc_all = lax.fori_loop(
+            0, cfg.num_layers, layer_body, (x, kc_all, vc_all),
+            unroll=cfg.scan_unroll)
+        return (kc_all, vc_all, x[:, -1])
+
+    h_last0 = jnp.zeros((b, cfg.d_model), L._dtype(cfg.dtype))
+    k_new, v_new, h_last = lax.fori_loop(
+        0, n_chunks, chunk_body, (cache0.k, cache0.v, h_last0))
+    h_last = L.apply_norm(cfg.norm, params["ln_f"], h_last)
+    logits = L.unembed(params["embed"], h_last)
+    return logits, KVCache(k_new, v_new, jnp.full((b,), s, jnp.int32))
+
+
+def decode_step(params: Params, cfg: ArchConfig, tokens: jax.Array,
+                cache: KVCache, tp: int = 1,
+                attn_fn=None) -> Tuple[jax.Array, KVCache]:
+    """One decode iteration: tokens (B,) -> logits (B, V), updated cache.
+
+    ``attn_fn(q, k_cache, v_cache, lengths) -> (B, Hq, D)`` may be overridden
+    with the sequence-sharded distributed implementation.
+    """
+    hq, hkv = cfg.padded_heads(tp)
+    attn_fn = attn_fn or L.decode_attention
+    x = L.embed(params["embed"], tokens)                 # (B, H)
+    b = x.shape[0]
+    positions = cache.lengths[:, None]                   # (B, 1)
+    if cfg.mrope:
+        positions = jnp.broadcast_to(positions[..., None], (b, 1, 3))
+
+    def body(li, carry):
+        x, kc_all, vc_all = carry
+        lp = jax.tree.map(
+            lambda a: lax.dynamic_index_in_dim(a, li, 0, keepdims=False),
+            params["blocks"])
+        kc = lax.dynamic_index_in_dim(kc_all, li, 0, keepdims=False)
+        vc = lax.dynamic_index_in_dim(vc_all, li, 0, keepdims=False)
+        h = L.apply_norm(cfg.norm, lp["ln1"], x[:, None, :])
+        q, k, v = L.qkv_project(lp["attn"], h, hq, hkv, cfg.d_head)
+        q = L.apply_rope(q, positions, cfg.rope_theta,
+                         cfg.mrope_sections if cfg.mrope else None)
+        k = L.apply_rope(k, positions, cfg.rope_theta,
+                         cfg.mrope_sections if cfg.mrope else None)
+        # write new k/v at each request's current length
+        idx = cache.lengths                              # (B,)
+        kc = jax.vmap(lambda c, kn, i: lax.dynamic_update_slice_in_dim(
+            c, kn, i, axis=0))(kc, k[:, 0:1], idx)
+        vc = jax.vmap(lambda c, vn, i: lax.dynamic_update_slice_in_dim(
+            c, vn, i, axis=0))(vc, v[:, 0:1], idx)
+        attn = attn_fn(q[:, 0], kc, vc, cache.lengths + 1)  # (B, Hq, D)
+        x = x + attn.reshape(b, hq * cfg.d_head) @ lp["attn"]["wo"]
+        h2 = L.apply_norm(cfg.norm, lp["ln2"], x)
+        if cfg.num_experts:
+            y = L.apply_moe(lp["moe"], h2, cfg)
+        else:
+            y = L.apply_ffn(lp["ffn"], h2, cfg.act)
+        # in-place cache update: a scan emitting stacked (k, v) outputs
+        # would materialize a SECOND full cache in temp (§Perf iter. 17)
+        kc_all = lax.dynamic_update_index_in_dim(kc_all, kc, li, 0)
+        vc_all = lax.dynamic_update_index_in_dim(vc_all, vc, li, 0)
+        return (x + y, kc_all, vc_all)
+
+    x, k_new, v_new = lax.fori_loop(0, cfg.num_layers, body,
+                                    (x, cache.k, cache.v),
+                                    unroll=cfg.scan_unroll)
+    x = L.apply_norm(cfg.norm, params["ln_f"], x)
+    logits = L.unembed(params["embed"], x)
+    return logits, KVCache(k_new, v_new, cache.lengths + 1)

@@ -1,0 +1,162 @@
+"""Unit tests for the single-core systolic / MAC-tree execution models."""
+import pytest
+
+from repro.core import (BufferConfig, Dataflow, Gemm, best_logical_shape,
+                        fixed_sa_system, mactree_gemm, mactree_system,
+                        sa_gemm, sa_gemm_auto, snake_system)
+from repro.core.hw import FP16_BYTES
+
+SNAKE_SA = snake_system().substrate
+BIG = BufferConfig(weight=1 << 30, act=1 << 30, out=1 << 30)
+TINY = BufferConfig(weight=4096, act=4096, out=4096)
+
+
+# ---------------------------------------------------------------------------
+# Cycle counts pinned to hand calculations
+# ---------------------------------------------------------------------------
+def test_os_cycles_exact_single_tile():
+    # 8x512 logical array, M=8, N=512 -> one tile, K temporal.
+    e = sa_gemm(Gemm("g", 8, 512, 1000), 8, 512, Dataflow.OS, BIG)
+    assert e.spatial_tiles == 1
+    assert e.array_cycles == 1000 + 8 + 512 - 2
+    assert e.fill_drain_cycles == 518
+
+
+def test_os_cycles_tiled():
+    e = sa_gemm(Gemm("g", 16, 1024, 100), 8, 512, Dataflow.OS, BIG)
+    # Tm=2, Tn=2 -> 4 tiles of (K + fill)
+    assert e.spatial_tiles == 4
+    assert e.array_cycles == 4 * (100 + 518)
+
+
+def test_is_cycles_exact():
+    # IS: M->rows, K->cols, N temporal.
+    e = sa_gemm(Gemm("g", 8, 1000, 512), 8, 512, Dataflow.IS, BIG)
+    assert e.spatial_tiles == 1
+    assert e.array_cycles == 1000 + 518
+
+
+def test_is_vs_os_tile_fold_rule():
+    """Paper §3.1: IS preferred when N > K, OS when K >= N (fewer folds)."""
+    sa = SNAKE_SA
+    g_ngk = Gemm("up", 8, 28672, 8192)    # N > K -> IS
+    g_kgn = Gemm("down", 8, 8192, 28672)  # K > N -> OS
+    assert sa_gemm_auto(g_ngk, sa).dataflow == Dataflow.IS
+    assert sa_gemm_auto(g_kgn, sa).dataflow == Dataflow.OS
+
+
+def test_compulsory_traffic_lower_bound():
+    g = Gemm("g", 8, 4096, 4096)
+    for df in Dataflow:
+        e = sa_gemm(g, 8, 512, df, BIG)
+        assert e.dram_bytes >= g.min_dram_bytes
+
+
+def test_big_buffers_reach_compulsory_traffic():
+    g = Gemm("g", 8, 4096, 4096)
+    e = sa_gemm(g, 8, 512, Dataflow.OS, BIG)
+    assert e.dram_bytes == g.min_dram_bytes
+
+
+def test_small_buffers_cause_rereads():
+    g = Gemm("g", 64, 8192, 8192)
+    big = sa_gemm(g, 8, 512, Dataflow.OS, BIG)
+    small = sa_gemm(g, 8, 512, Dataflow.OS, TINY)
+    assert small.dram_bytes > big.dram_bytes
+
+
+def test_mfold_weight_restream():
+    """Elongated fixed arrays re-stream weights once per M-fold (the
+    mechanism that sinks the 8x288 baseline at large batch)."""
+    g = Gemm("g", 64, 4096, 8192)
+    e = sa_gemm(g, 8, 288, Dataflow.OS, TINY)
+    tm = -(-64 // 8)
+    assert e.dram_bytes >= tm * g.b_bytes_once
+
+
+# ---------------------------------------------------------------------------
+# SNAKE serpentine logical remapping (paper §4.2.2)
+# ---------------------------------------------------------------------------
+def test_logical_shapes_preserve_pe_count():
+    for r, c in SNAKE_SA.logical_shapes():
+        assert r * c == 64 * 64
+
+
+@pytest.mark.parametrize("m,expect", [(1, (8, 512)), (8, (8, 512)),
+                                      (9, (16, 256)), (16, (16, 256)),
+                                      (17, (32, 128)), (32, (32, 128)),
+                                      (33, (64, 64)), (64, (64, 64)),
+                                      (100, (64, 64))])
+def test_shape_selection(m, expect):
+    assert best_logical_shape(SNAKE_SA, m) == expect
+
+
+def test_reconfig_beats_fixed_square_on_small_m():
+    """M=8 on the reshaped 8x512 must beat the same PEs as fixed 64x64."""
+    g = Gemm("g", 8, 8192, 4096)
+    elong = sa_gemm(g, 8, 512, Dataflow.IS, BIG)
+    square = sa_gemm(g, 64, 64, Dataflow.IS, BIG)
+    assert elong.array_cycles < square.array_cycles
+    assert elong.util > square.util
+
+
+def test_util_bounds():
+    for m in (1, 8, 13, 64, 200):
+        g = Gemm("g", m, 2048, 2048)
+        for df in Dataflow:
+            e = sa_gemm(g, *best_logical_shape(SNAKE_SA, m), df, BIG)
+            assert 0.0 < e.util <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# MAC tree
+# ---------------------------------------------------------------------------
+def test_mactree_cycles_exact():
+    mt = mactree_system().substrate
+    e = mactree_gemm(Gemm("g", 16, 160, 160), mt)
+    assert e.array_cycles == 1 * 10 * 10
+
+
+def test_mactree_m_padding_waste():
+    mt = mactree_system().substrate
+    full = mactree_gemm(Gemm("g", 16, 1600, 1600), mt)
+    half = mactree_gemm(Gemm("g", 8, 1600, 1600), mt)
+    assert half.array_cycles == full.array_cycles  # same cycles, half work
+    assert abs(half.util - full.util / 2) < 1e-9
+
+
+def test_mactree_higher_operand_traffic_per_mac():
+    """Broadcast delivery: tree fetches more SRAM bytes per MAC than SA."""
+    g = Gemm("g", 16, 4096, 4096)
+    mt = mactree_system().substrate
+    et = mactree_gemm(g, mt)
+    es = sa_gemm(g, 16, 256, Dataflow.OS, BIG)
+    assert et.sram_bytes / g.macs > es.sram_bytes / g.macs
+
+
+# ---------------------------------------------------------------------------
+# System-level hardware invariants (paper §1 / Fig. 1a)
+# ---------------------------------------------------------------------------
+def test_ridge_points_match_paper_band():
+    assert 3.7 <= mactree_system().ridge_point <= 6.7  # Stratum band
+    snake = snake_system()
+    assert snake.peak_flops > mactree_system().peak_flops * 3.1
+    # SNAKE's ridge sits well above batch-8 decode AI (=8 FLOP/B): batch-8
+    # decode is memory-bound on SNAKE, compute-bound on the MAC tree.
+    assert snake.ridge_point > 8 > mactree_system().ridge_point
+
+
+def test_area_efficiency_ratios():
+    from repro.core import area_model
+    am = area_model()
+    assert am["SNAKE"]["compute_area_efficiency"] == pytest.approx(4.00)
+    assert am["SA+VectorCore"]["compute_area_efficiency"] == pytest.approx(2.25)
+
+
+def test_power_budget_matches_paper():
+    from repro.core import peak_power_breakdown, snake_system
+    pb = peak_power_breakdown(snake_system())
+    total = sum(pb.values())
+    assert 55.0 < total < 70.0           # paper: 61.8 W
+    assert pb["matrix_w"] == pytest.approx(38.5, rel=0.05)
+    assert pb["vector_w"] == pytest.approx(14.2, rel=0.05)

@@ -1,0 +1,104 @@
+"""Hypothesis property tests: simulator invariants that must hold for any
+workload shape (monotonicity, conservation, bound-respecting)."""
+import dataclasses
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BufferConfig, Dataflow, Gemm, best_logical_shape,
+                        mactree_gemm, mactree_system, mode_candidates,
+                        sa_gemm, schedule_projection, snake_system)
+from repro.core.hw import FP16_BYTES
+
+SNAKE = snake_system()
+SA = SNAKE.substrate
+BIG = BufferConfig(weight=1 << 30, act=1 << 30, out=1 << 30)
+
+dims = st.integers(min_value=1, max_value=1 << 15)
+small_m = st.integers(min_value=1, max_value=256)
+flows = st.sampled_from(list(Dataflow))
+
+
+@given(m=small_m, n=dims, k=dims, df=flows)
+@settings(max_examples=200, deadline=None)
+def test_cycles_cover_macs(m, n, k, df):
+    """Array can never do more than rows*cols MACs per cycle."""
+    g = Gemm("g", m, n, k)
+    rows, cols = best_logical_shape(SA, m)
+    e = sa_gemm(g, rows, cols, df, BIG)
+    assert e.array_cycles * rows * cols >= g.m * g.n * g.k
+
+
+@given(m=small_m, n=dims, k=dims, df=flows)
+@settings(max_examples=200, deadline=None)
+def test_dram_at_least_compulsory(m, n, k, df):
+    g = Gemm("g", m, n, k)
+    rows, cols = best_logical_shape(SA, m)
+    e = sa_gemm(g, rows, cols, df, BIG)
+    assert e.dram_bytes >= g.min_dram_bytes
+    assert e.sram_bytes >= g.min_dram_bytes  # every DRAM byte staged once
+
+
+@given(m=small_m, n=dims, k=dims)
+@settings(max_examples=100, deadline=None)
+def test_bigger_buffers_never_increase_traffic(m, n, k):
+    g = Gemm("g", m, n, k)
+    small = BufferConfig(weight=32 * 1024, act=8 * 1024, out=16 * 1024)
+    for df in Dataflow:
+        e_small = sa_gemm(g, 8, 512, df, small)
+        e_big = sa_gemm(g, 8, 512, df, BIG)
+        assert e_big.dram_bytes <= e_small.dram_bytes
+
+
+@given(m=small_m, n=dims, k=dims)
+@settings(max_examples=100, deadline=None)
+def test_mactree_util_le_1_and_cycles_cover(m, n, k):
+    g = Gemm("g", m, n, k)
+    mt = mactree_system().substrate
+    e = mactree_gemm(g, mt)
+    assert 0 < e.util <= 1.0
+    assert e.array_cycles * mt.pes >= g.m * g.n * g.k
+
+
+@given(m=st.integers(1, 64), scale=st.integers(1, 8))
+@settings(max_examples=60, deadline=None)
+def test_more_work_more_time(m, scale):
+    """Scaling N by an integer factor never reduces scheduled op time."""
+    g1 = Gemm("g", m, 4096, 4096)
+    g2 = Gemm("g", m, 4096 * scale, 4096)
+    t1 = schedule_projection(SNAKE, g1).time_s
+    t2 = schedule_projection(SNAKE, g2).time_s
+    assert t2 >= t1 * 0.999
+
+
+@given(m=st.integers(1, 64), n=st.integers(256, 1 << 14),
+       k=st.integers(256, 1 << 14))
+@settings(max_examples=80, deadline=None)
+def test_schedule_time_bounded_by_roofline(m, n, k):
+    """Scheduled time must respect the device roofline (with a modest
+    scheduling-inefficiency allowance) and never beat it."""
+    g = Gemm("g", m, n, k)
+    ex = schedule_projection(SNAKE, g)
+    t_roofline = max(g.flops / SNAKE.peak_flops,
+                     g.min_dram_bytes / SNAKE.effective_dram_bw)
+    assert ex.time_s >= t_roofline * 0.999
+
+
+@given(m=st.integers(1, 64))
+@settings(max_examples=40, deadline=None)
+def test_shape_selection_total_pes_constant(m):
+    r, c = best_logical_shape(SA, m)
+    assert r * c == SA.pes
+    assert r % SA.reconfig_granularity == 0
+
+
+@given(b=st.integers(1, 64), ratio=st.floats(0.5, 2.0))
+@settings(max_examples=30, deadline=None)
+def test_energy_scales_with_work(b, ratio):
+    g1 = Gemm("g", b, 8192, 8192)
+    g2 = Gemm("g", b, int(8192 * ratio) or 1, 8192)
+    e1 = schedule_projection(SNAKE, g1).energy
+    e2 = schedule_projection(SNAKE, g2).energy
+    assert e1.mac_j > 0 and e2.mac_j > 0
+    if ratio > 1.05:
+        assert e2.mac_j > e1.mac_j

@@ -1,0 +1,206 @@
+"""Paper-claims validation (EXPERIMENTS.md §Paper).
+
+Reruns the paper's headline comparisons on the reproduced evaluation stack
+and asserts the results fall in documented bands.  Bands are wider than the
+paper's point values where our tile-level model is known to diverge from
+the paper's cycle-accurate Scale-Sim v3 + RTL setup (each divergence is
+documented in EXPERIMENTS.md §Paper-fidelity); they are tight where the
+quantity is a pure calibration (Fig. 11).
+"""
+import numpy as np
+import pytest
+
+from repro.core.energy import peak_power_breakdown
+from repro.core.gpu_model import gpu_decode_step
+from repro.core.hw import (area_model, fixed_sa_system, mactree_system,
+                           snake_system)
+from repro.core.operators import PAPER_MODELS, layer_ops_tp
+from repro.core.pipeline import decode_step
+from repro.core.schedule import Mode
+
+CTX = 8192 + 512
+TP = 8
+BATCHES = (8, 16, 32, 64)
+
+
+def _geomean(xs):
+    return float(np.exp(np.mean(np.log(np.asarray(xs)))))
+
+
+@pytest.fixture(scope="module")
+def ratios():
+    systems = {"MAC-Tree": mactree_system(),
+               "SA-48x48": fixed_sa_system(48, 48),
+               "SA-8x288": fixed_sa_system(8, 288)}
+    snake = snake_system()
+    out = {k: {"speedup": [], "energy": []} for k in
+           list(systems) + ["GPU"]}
+    for spec in PAPER_MODELS.values():
+        for b in BATCHES:
+            rs = decode_step(snake, spec, b, CTX, tp=TP)
+            for k, sysm in systems.items():
+                r = decode_step(sysm, spec, b, CTX, tp=TP)
+                out[k]["speedup"].append(r.time_s / rs.time_s)
+                out[k]["energy"].append(
+                    r.energy.logic_die_j / rs.energy.logic_die_j)
+            g = gpu_decode_step(spec, b, CTX, tp=TP)
+            out["GPU"]["speedup"].append(g.time_s / rs.time_s)
+            out["GPU"]["energy"].append(
+                g.energy_j / rs.energy.logic_die_j)
+    return {k: {m: _geomean(v) for m, v in d.items()}
+            for k, d in out.items()}
+
+
+# ---------------------------------------------------------------------------
+# Fig. 12 — decode speedup / energy efficiency vs baselines
+# ---------------------------------------------------------------------------
+def test_speedup_vs_mactree(ratios):
+    """Paper: 2.90x average speedup over the Stratum-configured MAC tree."""
+    assert 1.7 <= ratios["MAC-Tree"]["speedup"] <= 4.0
+
+
+def test_energy_vs_mactree(ratios):
+    """Paper: 2.40x average energy efficiency over the MAC tree."""
+    assert 1.7 <= ratios["MAC-Tree"]["energy"] <= 3.4
+
+
+def test_speedup_vs_sa48(ratios):
+    """Paper: 2.33x over the fixed 48x48 SA."""
+    assert 1.6 <= ratios["SA-48x48"]["speedup"] <= 3.3
+
+
+def test_energy_vs_sa48(ratios):
+    """Paper: 1.05x over the fixed 48x48 SA (energy)."""
+    assert 0.9 <= ratios["SA-48x48"]["energy"] <= 2.2
+
+
+def test_speedup_vs_sa8x288(ratios):
+    """Paper: 3.00x over the fixed 8x288 SA.  Our tile-level model keeps
+    the elongated array competitive at small batch (documented divergence:
+    no cycle-level stall modelling), so only the direction is asserted."""
+    assert ratios["SA-8x288"]["speedup"] >= 1.15
+
+
+def test_energy_vs_sa8x288(ratios):
+    """Paper: 1.31x energy efficiency over the 8x288 SA."""
+    assert 0.9 <= ratios["SA-8x288"]["energy"] <= 1.9
+
+
+def test_speedup_vs_gpu(ratios):
+    """Paper: 11.47x over 8x H100 decoding."""
+    assert 5.5 <= ratios["GPU"]["speedup"] <= 18.0
+
+
+def test_energy_vs_gpu(ratios):
+    """Paper: 5.74x energy efficiency over the GPU (logic-die vs silicon
+    accounting; our GPU energy model is coarser — wide band)."""
+    assert 4.0 <= ratios["GPU"]["energy"] <= 14.0
+
+
+def test_snake_strictly_dominates_every_model(ratios):
+    """SNAKE must beat the MAC tree on every (model, batch) cell at b>=16
+    (the compute-bound regime the paper targets)."""
+    snake = snake_system()
+    mac = mactree_system()
+    for spec in PAPER_MODELS.values():
+        for b in (16, 32, 64):
+            rs = decode_step(snake, spec, b, CTX, tp=TP)
+            rm = decode_step(mac, spec, b, CTX, tp=TP)
+            assert rm.time_s > rs.time_s, (spec.name, b)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 11 — area / power calibration (tight: pure calibration)
+# ---------------------------------------------------------------------------
+def test_compute_area_efficiency():
+    am = area_model()
+    assert am["SNAKE"]["compute_area_efficiency"] == pytest.approx(4.00)
+    assert am["SA+VectorCore"]["compute_area_efficiency"] == \
+        pytest.approx(2.25)
+
+
+def test_area_breakdown_shares():
+    am = area_model()
+    assert am["SNAKE"]["breakdown"]["buffers"] == pytest.approx(0.281)
+    assert am["SA+VectorCore"]["breakdown"]["buffers"] == pytest.approx(0.536)
+    assert am["SNAKE"]["breakdown"]["vector"] == pytest.approx(0.088)
+
+
+def test_power_breakdown_near_paper():
+    """Paper: 61.8 W total = 38.5 matrix + 14.2 vector + 4.4 ctrl + 4.8 NoC
+    at the 800 MHz thermal operating point."""
+    pw = peak_power_breakdown(snake_system())
+    assert pw["matrix_w"] == pytest.approx(38.5, rel=0.05)
+    assert pw["vector_w"] == pytest.approx(14.2, rel=0.05)
+    assert pw["ctrl_w"] == pytest.approx(4.4, rel=0.01)
+    total = sum(v for k, v in pw.items())
+    assert total == pytest.approx(61.8, rel=0.06)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 1 — motivation: decode is compute-bound on 3D NMP
+# ---------------------------------------------------------------------------
+def test_ridge_points():
+    """Stratum-class ridge 3.7-6.7 FLOP/B; SNAKE raises it ~3.2x."""
+    mac = mactree_system()
+    snake = snake_system()
+    assert 3.7 <= mac.ridge_point <= 8.0
+    assert snake.ridge_point / mac.ridge_point == pytest.approx(3.2, rel=0.1)
+
+
+def test_decode_flops_mostly_compute_bound_on_stratum():
+    """Fig. 1a: at batch>=16 most decode FLOPs sit above Stratum's ridge."""
+    spec = PAPER_MODELS["LLaMA3-70B"]
+    mac = mactree_system()
+    for b in (16, 32, 64):
+        lo = layer_ops_tp(spec, b, CTX, TP)
+        ops = list(lo.projections) + list(lo.attention) + list(lo.experts)
+        cb = sum(g.flops for g in ops
+                 if g.arithmetic_intensity > mac.ridge_point)
+        assert cb / sum(g.flops for g in ops) > 0.5, b
+
+
+def test_stratum_compute_lags_memory():
+    """Fig. 1b: on the MAC tree, array time exceeds memory-supply time."""
+    spec = PAPER_MODELS["LLaMA3-70B"]
+    mac = mactree_system()
+    for b in (16, 32, 64):
+        rep = decode_step(mac, spec, b, CTX, tp=TP)
+        comp = sum(e.compute_s for e in rep.op_execs)
+        mem = sum(e.memory_s for e in rep.op_execs)
+        assert comp > mem, b
+
+
+# ---------------------------------------------------------------------------
+# Fig. 13 — per-operator scheduling beats any fixed mode
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("model", ["LLaMA3-70B", "Qwen3-30B-A3B"])
+def test_scheduler_beats_fixed_modes(model):
+    spec = PAPER_MODELS[model]
+    sys = snake_system()
+    for b in (8, 32):
+        best = decode_step(sys, spec, b, CTX, tp=TP).time_s
+        for m in Mode:
+            fixed = decode_step(sys, spec, b, CTX, tp=TP,
+                                fixed_mode=m).time_s
+            assert fixed >= best * 0.999, (model, b, m.value)
+
+
+# ---------------------------------------------------------------------------
+# Serving (Fig. 10) — ordering at saturation
+# ---------------------------------------------------------------------------
+def test_serving_ordering_at_saturation():
+    """At decode saturation, SNAKE <= MAC tree <= ~GPU on TBT (LLaMA3)."""
+    from repro.core.serving_sim import (gpu_latency_model,
+                                        nmp_latency_model,
+                                        simulate_serving)
+    spec = PAPER_MODELS["LLaMA3-70B"]
+    rate = 2.0
+    base = simulate_serving(nmp_latency_model(snake_system(), spec, tp=TP),
+                            spec, rate, system="SNAKE", n_requests=32)
+    mac = simulate_serving(nmp_latency_model(mactree_system(), spec, tp=TP),
+                           spec, rate, system="MAC", n_requests=32)
+    gpu = simulate_serving(gpu_latency_model(spec, tp=TP), spec, rate,
+                           system="GPU", n_requests=32)
+    assert base.tbt_mean_s < mac.tbt_mean_s < gpu.tbt_mean_s
+    assert base.e2e_mean_s <= mac.e2e_mean_s <= gpu.e2e_mean_s

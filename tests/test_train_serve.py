@@ -1,0 +1,198 @@
+"""Integration tests: training loop (checkpoint/resume/determinism),
+serving engine (continuous batching), gradient compression, microbatching.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.launch.train import train
+from repro.models import registry
+from repro.optim import adamw as axw
+from repro.serving.engine import EngineConfig, ServingEngine
+
+
+# ---------------------------------------------------------------------------
+# Training driver
+# ---------------------------------------------------------------------------
+def test_train_loss_decreases(tmp_path):
+    out = train("yi-6b", steps=14, global_batch=4, seq=64,
+                ckpt_dir=str(tmp_path), save_every=6, log_every=100)
+    assert out["steps"] == 14
+    assert np.isfinite(out["final_loss"])
+    assert out["final_loss"] < out["first_loss"]
+
+
+def test_train_resume_is_exact(tmp_path):
+    """Crash/restart must replay to the same loss as an uninterrupted run
+    (atomic checkpoints + shard-deterministic data)."""
+    a = train("stablelm-3b", steps=10, global_batch=2, seq=32,
+              ckpt_dir=None, log_every=100, seed=3)
+    train("stablelm-3b", steps=10, stop_step=6, global_batch=2, seq=32,
+          ckpt_dir=str(tmp_path), save_every=6, log_every=100, seed=3)
+    b = train("stablelm-3b", steps=10, global_batch=2, seq=32,
+              ckpt_dir=str(tmp_path), save_every=100, log_every=100, seed=3)
+    assert b["final_loss"] == pytest.approx(a["final_loss"], rel=1e-4)
+
+
+def test_grad_compression_trains(tmp_path):
+    out = train("yi-6b", steps=8, global_batch=2, seq=32,
+                ckpt_dir=None, compress_grads=True, log_every=100)
+    assert np.isfinite(out["final_loss"])
+    assert out["final_loss"] < out["first_loss"] + 0.5
+
+
+def test_microbatched_step_matches_full_batch():
+    """Gradient accumulation must give (numerically) the same update."""
+    from repro.launch.mesh import make_mesh
+    from repro.launch.steps import make_train_step
+    entry = registry.get("yi-6b", reduced=True)
+    cfg = entry.config
+    mesh = make_mesh((1, 1), ("data", "model"))
+    ocfg = axw.AdamWConfig()
+    params = entry.module.init(jax.random.PRNGKey(0), cfg, 1)
+    opt = axw.init(params, ocfg)
+    data = TokenPipeline(DataConfig(vocab=cfg.vocab, seq_len=32,
+                                    global_batch=4))
+    batch = {k: v for k, v in data.batch_at(0).items() if k != "mask"}
+    s1 = jax.jit(make_train_step(entry, ocfg, 1, mesh))
+    s2 = jax.jit(make_train_step(entry, ocfg, 1, mesh, microbatch=2))
+    _, _, m1 = s1(params, opt, batch)
+    _, _, m2 = s2(params, opt, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-5)
+    assert float(m1["grad_norm"]) == pytest.approx(float(m2["grad_norm"]),
+                                                   rel=1e-3)
+
+
+def test_data_pipeline_shard_determinism():
+    cfg = DataConfig(vocab=1000, seq_len=16, global_batch=8)
+    full = TokenPipeline(cfg).batch_at(5)
+    shards = [TokenPipeline(cfg, shard=i, num_shards=4).batch_at(5)
+              for i in range(4)]
+    # shard batches are deterministic and distinct
+    assert not np.array_equal(shards[0]["tokens"], shards[1]["tokens"])
+    again = TokenPipeline(cfg, shard=2, num_shards=4).batch_at(5)
+    np.testing.assert_array_equal(shards[2]["tokens"], again["tokens"])
+    del full
+
+
+# ---------------------------------------------------------------------------
+# Serving engine
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["yi-6b", "rwkv6-7b"])
+def test_engine_completes_workload(arch):
+    entry = registry.get(arch, reduced=True)
+    ecfg = EngineConfig(max_batch=3, max_seq=48, max_new_tokens=6)
+    eng = ServingEngine(entry, ecfg)
+    m = eng.run_workload(rate_req_s=50.0, n_requests=7, prompt_len=16)
+    assert m["requests"] == 7
+    assert m["decoded_tokens"] == 7 * 6
+    assert m["tokens_per_s"] > 0
+
+
+def test_engine_continuous_batching_reuses_slots():
+    entry = registry.get("yi-6b", reduced=True)
+    ecfg = EngineConfig(max_batch=2, max_seq=48, max_new_tokens=4)
+    eng = ServingEngine(entry, ecfg)
+    m = eng.run_workload(rate_req_s=100.0, n_requests=5, prompt_len=8)
+    assert m["requests"] == 5           # 5 requests through 2 slots
+
+
+def test_engine_matches_offline_decode():
+    """Engine tokens == straight prefill+decode_step loop tokens."""
+    entry = registry.get("yi-6b", reduced=True)
+    cfg = entry.config
+    ecfg = EngineConfig(max_batch=2, max_seq=40, max_new_tokens=4)
+    eng = ServingEngine(entry, ecfg)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab, size=(16,)).astype(np.int32)
+    from repro.serving.engine import RequestState
+    req = RequestState(0, prompt)
+    assert eng.submit(req)
+    while not req.done:
+        eng.step()
+    # offline reference
+    logits, cache = entry.module.prefill(
+        eng.params, cfg, jnp.asarray(prompt[None, :]), tp=1, max_seq=40)
+    toks = [int(jnp.argmax(logits[0, : cfg.vocab]))]
+    for _ in range(3):
+        logits, cache = entry.module.decode_step(
+            eng.params, cfg, jnp.asarray([toks[-1]], jnp.int32), cache,
+            tp=1)
+        toks.append(int(jnp.argmax(logits[0, : cfg.vocab])))
+    assert req.tokens_out == toks
+
+
+def test_chunked_prefill_matches_full():
+    """Sarathi-style chunked prefill must reproduce full-prefill logits
+    and cache exactly (fp32 reduced config)."""
+    entry = registry.get("yi-6b", reduced=True)
+    cfg = entry.config
+    params = entry.module.init(jax.random.PRNGKey(0), cfg, 1)
+    toks = np.random.default_rng(1).integers(
+        0, cfg.vocab, (2, 64)).astype(np.int32)
+    lf, cf = entry.module.prefill(params, cfg, jnp.asarray(toks), tp=1,
+                                  max_seq=96)
+    lc, cc = entry.module.prefill(params, cfg, jnp.asarray(toks), tp=1,
+                                  max_seq=96, chunk=16)
+    np.testing.assert_allclose(np.asarray(lc), np.asarray(lf),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(cc.k[:, :, :64]),
+                               np.asarray(cf.k[:, :, :64]),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_array_equal(np.asarray(cc.lengths),
+                                  np.asarray(cf.lengths))
+    # and decode continues identically from either cache
+    nxt = jnp.argmax(lf[:, : cfg.vocab], -1).astype(jnp.int32)
+    df, _ = entry.module.decode_step(params, cfg, nxt, cf, tp=1)
+    dc, _ = entry.module.decode_step(params, cfg, nxt, cc, tp=1)
+    np.testing.assert_allclose(np.asarray(dc), np.asarray(df),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_engine_chunked_prefill_same_tokens():
+    """The engine with Sarathi chunked prefill decodes identical tokens."""
+    entry = registry.get("yi-6b", reduced=True)
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, entry.config.vocab, size=(32,)).astype(np.int32)
+    outs = []
+    for chunk in (None, 8):
+        ecfg = EngineConfig(max_batch=2, max_seq=48, max_new_tokens=4,
+                            prefill_chunk=chunk)
+        eng = ServingEngine(entry, ecfg)
+        from repro.serving.engine import RequestState
+        req = RequestState(0, prompt)
+        assert eng.submit(req)
+        while not req.done:
+            eng.step()
+        outs.append(req.tokens_out)
+    assert outs[0] == outs[1]
+
+
+def test_train_retries_transient_failures(monkeypatch, tmp_path):
+    """Bounded retry: a step that fails transiently must be retried and the
+    run must complete (fault-tolerance path)."""
+    import repro.launch.train as T
+    real_jit = jax.jit
+    state = {"fails_left": 2}
+
+    def flaky_jit(fn, **kw):
+        compiled = real_jit(fn, **kw)
+
+        def wrapper(*a, **k):
+            if state["fails_left"] > 0:
+                state["fails_left"] -= 1
+                raise RuntimeError("injected transient failure")
+            return compiled(*a, **k)
+
+        return wrapper
+
+    monkeypatch.setattr(T.jax, "jit", flaky_jit)
+    out = T.train("yi-6b", steps=4, global_batch=2, seq=32,
+                  ckpt_dir=None, log_every=100, max_retries=3)
+    assert out["steps"] == 4
+    assert state["fails_left"] == 0
+    assert np.isfinite(out["final_loss"])
