@@ -62,4 +62,18 @@ def run() -> List[Row]:
                             geomean(d["e2e"])))
             rows.append(Row(f"fig10/{model}/tbt_vs_snake_{k}",
                             geomean(d["tbt"])))
+        # paged vs dense KV occupancy on the SNAKE decode substrate: the
+        # block-table cache keeps resident KV proportional to the live
+        # contexts instead of the max_batch x (in+out) reservation
+        rate = 0.6 * sat
+        occ = {}
+        for mode in ("dense", "paged"):
+            rep = simulate_serving(lat_snake, spec, rate, system="SNAKE",
+                                   n_requests=N_REQ, cache_mode=mode)
+            occ[mode] = rep
+            rows.append(Row(f"fig10/{model}/kv_util_{mode}",
+                            rep.kv_util_mean))
+        rows.append(Row(f"fig10/{model}/kv_peak_tokens_paged_over_dense",
+                        occ["paged"].kv_peak_tokens
+                        / max(1, occ["dense"].kv_peak_tokens)))
     return rows

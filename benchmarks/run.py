@@ -25,6 +25,7 @@ MODULES = [
     "fig10_serving",       # Fig. 10    serving E2E/TBT vs request rate
     "kernel_bench",        # Pallas kernels vs oracles + chosen mappings
     "tpu_roofline",        # deliverable (g): dry-run roofline table
+    "serving_paged",       # paged vs dense engine on a skewed-length trace
 ]
 
 

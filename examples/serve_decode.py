@@ -3,18 +3,25 @@ continuous-batching engine on two architecture families (a GQA dense LM and
 the attention-free RWKV6), with the flash-decode Pallas kernel optionally in
 the attention path.
 
+``--paged`` switches both engines to the block-table paged KV cache (the
+RWKV state has no sequence axis, so its paged cache degenerates to the
+slot-dense layout and the comparison shows zero pages); ``--prefill-chunk``
+co-schedules Sarathi prefill chunks with the hot decode batch.
+
   PYTHONPATH=src python examples/serve_decode.py
-  PYTHONPATH=src python examples/serve_decode.py --pallas
+  PYTHONPATH=src python examples/serve_decode.py --pallas --paged
 """
 import argparse
 
 from repro.models import registry
-from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.engine import EngineConfig, make_engine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--pallas", action="store_true")
+    ap.add_argument("--paged", action="store_true")
+    ap.add_argument("--prefill-chunk", type=int, default=None)
     ap.add_argument("--n-requests", type=int, default=10)
     ap.add_argument("--rate", type=float, default=6.0)
     args = ap.parse_args()
@@ -22,14 +29,17 @@ def main():
     for arch in ("yi-6b", "rwkv6-7b"):
         entry = registry.get(arch, reduced=True)
         ecfg = EngineConfig(max_batch=4, max_seq=64, max_new_tokens=12,
-                            use_pallas_decode=args.pallas)
-        eng = ServingEngine(entry, ecfg)
+                            use_pallas_decode=args.pallas,
+                            paged=args.paged, page_size=16,
+                            prefill_chunk=args.prefill_chunk)
+        eng = make_engine(entry, ecfg)
         m = eng.run_workload(rate_req_s=args.rate,
                              n_requests=args.n_requests, prompt_len=24)
         print(f"[serve_decode] {arch:10s} {m['requests']} reqs  "
               f"{m['decoded_tokens']} toks  {m['tokens_per_s']:.1f} tok/s  "
               f"TBT mean {m['tbt_mean_s'] * 1e3:.1f}ms "
-              f"p99 {m['tbt_p99_s'] * 1e3:.1f}ms")
+              f"p99 {m['tbt_p99_s'] * 1e3:.1f}ms  "
+              f"kv={m['kv_mode']} peak {m['kv_peak_tokens']} tok")
 
 
 if __name__ == "__main__":

@@ -14,6 +14,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.gemm import ceil_div
 from repro.core.gpu_model import gpu_decode_step
 from repro.core.hw import H100, GPUConfig, NMPSystem
 from repro.core.operators import ModelSpec
@@ -30,6 +31,11 @@ class Request:
     tokens_out: int = 0
     finish_s: float = math.inf
     token_times: List[float] = field(default_factory=list)
+    pages_held: int = 0
+    prefill_remaining: int = 0
+
+    def ctx(self) -> int:
+        return self.input_len + self.tokens_out
 
 
 @dataclass
@@ -41,6 +47,12 @@ class ServingReport:
     e2e_p90_s: float
     tbt_mean_s: float
     completed: int
+    # paged / chunked-prefill extensions (defaults keep old call sites)
+    ttft_mean_s: float = 0.0
+    kv_util_mean: float = 0.0       # time-weighted used/reserved KV tokens
+    kv_peak_tokens: int = 0
+    max_decode_stall_s: float = 0.0  # longest gap decode waited on prefill
+    preemptions: int = 0
 
     def normalized_to(self, base: "ServingReport") -> Tuple[float, float]:
         return (self.e2e_mean_s / base.e2e_mean_s,
@@ -83,62 +95,189 @@ def gpu_latency_model(spec: ModelSpec, tp: int = 8) -> DecodeLatencyModel:
         lambda b, c: gpu_decode_step(spec, b, c, tp=tp).time_s)
 
 
+def _pages(n_tokens: int, page_size: int) -> int:
+    return ceil_div(n_tokens, page_size)
+
+
 def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
                      rate_req_s: float, *, system: str,
                      n_requests: int = 128, input_len: int = 8192,
                      output_len: int = 1024, max_batch: int = 64,
-                     seed: int = 0) -> ServingReport:
+                     seed: int = 0, cache_mode: str = "dense",
+                     page_size: int = 16, num_pages: Optional[int] = None,
+                     prefill_chunk: Optional[int] = None,
+                     prefill_on_device: bool = False) -> ServingReport:
+    """Analytical serving simulation.
+
+    Mirrors the real-JAX engine's two policy axes (same defaults keep the
+    seed behavior bit-for-bit):
+
+    * ``cache_mode``: ``"dense"`` reserves ``max_batch x (in+out)`` KV
+      tokens; ``"paged"`` admits against a page pool (``num_pages`` of
+      ``page_size`` tokens, defaulting to the dense-equivalent capacity),
+      grows contexts on demand, and preempts the youngest request when the
+      pool runs dry.  ``kv_util_mean`` reports time-weighted used/reserved
+      KV — the Fig. 10 paged-vs-dense occupancy comparison.
+    * ``prefill_on_device``: instead of the serialized external H100x8
+      prefill stream, prefill work runs on the decode device itself.
+      Without ``prefill_chunk`` an admission stalls the whole decode batch
+      for the full prompt; with it, at most one chunk of prefill is
+      co-scheduled per decode iteration (Sarathi), bounding the stall
+      (reported as ``max_decode_stall_s``).
+    """
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(1.0 / rate_req_s, size=n_requests)
     arrivals = np.cumsum(gaps)
-    reqs = [Request(i, float(arrivals[i]), input_len, output_len)
+    reqs = [Request(i, float(arrivals[i]), input_len, output_len,
+                    prefill_remaining=input_len if prefill_on_device else 0)
             for i in range(n_requests)]
 
-    # --- prefill: single serialized H100x8 stream ---------------------------
     t_pf = _prefill_time(spec, input_len)
-    t = 0.0
-    for r in reqs:
-        t = max(t, r.arrival_s) + t_pf
-        r.prefill_done_s = t
+    if not prefill_on_device:
+        # --- prefill: single serialized H100x8 stream -----------------------
+        t = 0.0
+        for r in reqs:
+            t = max(t, r.arrival_s) + t_pf
+            r.prefill_done_s = t
+
+    paged = cache_mode == "paged"
+    pages_cap = (num_pages if num_pages is not None
+                 else max_batch * _pages(input_len + output_len, page_size))
+    if paged and pages_cap < _pages(input_len + output_len, page_size):
+        raise ValueError(
+            f"num_pages={pages_cap} cannot hold even one full context "
+            f"({_pages(input_len + output_len, page_size)} pages)")
+    free_pages = pages_cap
+    dense_reserved = max_batch * (input_len + output_len)
+
+    def ready_time(r: Request) -> float:
+        return r.arrival_s if prefill_on_device else r.prefill_done_s
 
     # --- continuous-batching decode -----------------------------------------
     clock = 0.0
-    pending = sorted(reqs, key=lambda r: r.prefill_done_s)
+    pending = sorted(reqs, key=ready_time)
     active: List[Request] = []
     done: List[Request] = []
-    pi = 0
+    util_integral = 0.0
+    util_time = 0.0
+    kv_peak = 0
+    max_stall = 0.0
+    preemptions = 0
+
+    def admit_pages(r: Request) -> bool:
+        nonlocal free_pages
+        if not paged:
+            return True
+        need = _pages(r.input_len + 1, page_size)
+        if free_pages < need:
+            return False
+        free_pages -= need
+        r.pages_held = need
+        return True
+
+    def release(r: Request) -> None:
+        nonlocal free_pages
+        if paged:
+            free_pages += r.pages_held
+            r.pages_held = 0
+
+    def preempt_youngest(exclude: Request) -> bool:
+        nonlocal preemptions
+        cands = [r for r in active
+                 if r is not exclude and r.prefill_remaining == 0]
+        if not cands:
+            return False
+        victim = max(cands, key=lambda r: (r.arrival_s, r.rid))
+        active.remove(victim)
+        release(victim)
+        victim.tokens_out = 0
+        victim.token_times = []
+        if prefill_on_device:
+            victim.prefill_remaining = victim.input_len
+        else:                       # must re-prefill on the xPU stream
+            victim.prefill_done_s = clock + t_pf
+        pending.append(victim)
+        pending.sort(key=ready_time)
+        preemptions += 1
+        return True
+
     while len(done) < n_requests:
-        while pi < n_requests and pending[pi].prefill_done_s <= clock \
-                and len(active) < max_batch:
-            active.append(pending[pi])
-            pi += 1
+        while pending and ready_time(pending[0]) <= clock \
+                and len(active) < max_batch and admit_pages(pending[0]):
+            active.append(pending.pop(0))
         if not active:
-            clock = pending[pi].prefill_done_s
+            clock = max(clock, ready_time(pending[0]))
             continue
-        ctx = int(np.mean([r.input_len + r.tokens_out for r in active]))
-        it = latency(len(active), ctx)
-        clock += it
-        still: List[Request] = []
-        for r in active:
+
+        decoding = [r for r in active if r.prefill_remaining == 0]
+        # --- co-scheduled on-device prefill ---------------------------------
+        stall = 0.0
+        pf = next((r for r in active if r.prefill_remaining > 0), None)
+        if pf is not None:
+            step_toks = (pf.prefill_remaining if prefill_chunk is None
+                         else min(prefill_chunk, pf.prefill_remaining))
+            stall = _prefill_time(spec, step_toks, n_gpus=1)
+            pf.prefill_remaining -= step_toks
+        it = (latency(len(decoding),
+                      int(np.mean([r.ctx() for r in decoding])))
+              if decoding else 0.0)
+        clock += it + stall
+        if decoding:                # stall only counts against hot decode
+            max_stall = max(max_stall, stall)
+        if pf is not None and pf.prefill_remaining == 0:
+            pf.prefill_done_s = clock
+
+        # --- occupancy accounting (resident KV over this interval) ---------
+        used = sum(r.input_len - r.prefill_remaining + r.tokens_out
+                   for r in active)
+        reserved = ((pages_cap - free_pages) * page_size if paged
+                    else dense_reserved)
+        kv_peak = max(kv_peak, reserved)
+        dt = it + stall
+        if dt > 0 and reserved > 0:
+            util_integral += (used / reserved) * dt
+            util_time += dt
+
+        # --- decode token + on-demand page growth ---------------------------
+        for r in decoding:
+            if r not in active:     # preempted earlier in this iteration
+                continue
+            if paged:
+                need = _pages(r.ctx() + 1, page_size) - r.pages_held
+                while need > free_pages:
+                    if not preempt_youngest(exclude=r):
+                        raise RuntimeError("page pool too small for one "
+                                           "request")
+                free_pages -= need
+                r.pages_held += need
             r.tokens_out += 1
             r.token_times.append(clock)
+            if paged:               # growth may move the peak mid-iteration
+                kv_peak = max(kv_peak,
+                              (pages_cap - free_pages) * page_size)
             if r.tokens_out >= r.output_len:
                 r.finish_s = clock
+                release(r)
+                active.remove(r)
                 done.append(r)
-            else:
-                still.append(r)
-        active = still
 
     e2e = np.array([r.finish_s - r.arrival_s for r in done])
-    tbts = []
+    tbts, ttfts = [], []
     for r in done:
         tt = np.asarray(r.token_times)
         first = r.prefill_done_s
         gaps_r = np.diff(np.concatenate([[first], tt]))
         tbts.append(gaps_r.mean())
+        ttfts.append(tt[0] - r.arrival_s)
     return ServingReport(system=system, model=spec.name,
                          rate_req_s=rate_req_s,
                          e2e_mean_s=float(e2e.mean()),
                          e2e_p90_s=float(np.percentile(e2e, 90)),
                          tbt_mean_s=float(np.mean(tbts)),
-                         completed=len(done))
+                         completed=len(done),
+                         ttft_mean_s=float(np.mean(ttfts)),
+                         kv_util_mean=(util_integral / util_time
+                                       if util_time else 0.0),
+                         kv_peak_tokens=int(kv_peak),
+                         max_decode_stall_s=max_stall,
+                         preemptions=preemptions)

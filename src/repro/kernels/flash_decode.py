@@ -66,6 +66,106 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
                        / jnp.maximum(l_ref[:, :1], 1e-20)).astype(o_ref.dtype)
 
 
+def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, page: int, n_blocks: int,
+                  scale: float):
+    """Per-(request, kv-head, table-entry) program.
+
+    The grid's S axis walks the slot's BLOCK TABLE instead of a contiguous
+    context: the k/v BlockSpec index_map dereferences the scalar-prefetched
+    table, so each step DMAs one page straight out of the pool — the paged
+    cache is never materialized as a dense (B, S) view.  Unmapped entries
+    point at the scratch page and are masked by ``lengths`` exactly like
+    the padded tail in the contiguous kernel.
+    """
+    bi = pl.program_id(0)
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)            # (page, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                        preferred_element_type=jnp.float32) * scale
+    pos = si * page + lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = pos < len_ref[bi]
+    s = jnp.where(valid, s, NEG)
+
+    m_prev = m_ref[:, :1]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+    l_new = l_ref[:, :1] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[:, :1] = m_new
+    l_ref[:, :1] = l_new
+
+    @pl.when(si == n_blocks - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[:, :1], 1e-20)).astype(o_ref.dtype)
+
+
+def paged_flash_decode(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                       tables: jax.Array, lengths: jax.Array,
+                       interpret: bool = False) -> jax.Array:
+    """Flash decode through a block table (vLLM-style paged attention).
+
+    q: (B, Hq, D); k_pool/v_pool: (P+1, page, Hkv, D) page pools whose last
+    page is scratch; tables: (B, nblk) int32 page ids (unmapped -> scratch
+    page); lengths: (B,) valid context per request.  Returns (B, Hq, D).
+
+    On real TPUs the page size should be a multiple of the sublane count
+    (8 fp32 / 16 bf16) so each page DMA is tile-aligned.
+    """
+    b, hq, d = q.shape
+    npages, page, hkv, _ = k_pool.shape
+    nblk = tables.shape[1]
+    g = hq // hkv
+    gp = _round_up(g, _sublane(q.dtype))
+    scale = 1.0 / math.sqrt(d)
+
+    qr = q.reshape(b, hkv, g, d)
+    qr = jnp.pad(qr, ((0, 0), (0, 0), (0, gp - g), (0, 0)))
+    kt = jnp.moveaxis(k_pool, 2, 1)               # (P+1, Hkv, page, D)
+    vt = jnp.moveaxis(v_pool, 2, 1)
+
+    grid = (b, hkv, nblk)
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                    # tables, lengths
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, gp, d),
+                         lambda bi, hi, si, tbl, ln: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, page, d),
+                         lambda bi, hi, si, tbl, ln: (tbl[bi, si], hi, 0, 0)),
+            pl.BlockSpec((1, 1, page, d),
+                         lambda bi, hi, si, tbl, ln: (tbl[bi, si], hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, gp, d),
+                               lambda bi, hi, si, tbl, ln: (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((gp, d), jnp.float32),
+            pltpu.VMEM((gp, 128), jnp.float32),
+            pltpu.VMEM((gp, 128), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, page=page, n_blocks=nblk,
+                          scale=scale),
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, gp, d), q.dtype),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), lengths.astype(jnp.int32), qr, kt, vt)
+    return out[:, :, :g, :].reshape(b, hq, d)
+
+
 def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
                  lengths: jax.Array, block_s: int = 512,
                  interpret: bool = False) -> jax.Array:

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_decode import flash_decode as _flash_decode
+from repro.kernels.flash_decode import paged_flash_decode as _paged_flash
 from repro.kernels.snake_gemm import (GemmMapping, choose_mapping,
                                       snake_decode_gemm as _snake_gemm)
 from repro.kernels.wkv6 import wkv6 as _wkv6
@@ -41,6 +42,16 @@ def attention_decode(q, k, v, lengths, block_s: int = 512,
     """GQA flash-decode: q (B,Hq,D) against (B,S,Hkv,D) caches."""
     interp = _interpret() if interpret is None else interpret
     return _flash_decode(q, k, v, lengths, block_s=block_s, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def attention_decode_paged(q, k_pool, v_pool, tables, lengths,
+                           interpret: bool = None):
+    """GQA flash-decode through a block table: q (B,Hq,D) against page
+    pools (P+1,page,Hkv,D) mapped by tables (B,nblk)."""
+    interp = _interpret() if interpret is None else interpret
+    return _paged_flash(q, k_pool, v_pool, tables, lengths,
+                        interpret=interp)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -9,6 +9,23 @@ from __future__ import annotations
 import jax
 
 
+def _mesh(shape, axes):
+    """Version-portable mesh constructor.
+
+    ``jax.sharding.AxisType`` (and ``make_mesh``'s ``axis_types`` kwarg)
+    only exist in some JAX releases; every axis we use is Auto anyway, which
+    is the default, so fall back to the plain constructor when absent.
+    """
+    if hasattr(jax.sharding, "AxisType"):
+        try:
+            return jax.make_mesh(
+                shape, axes,
+                axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+        except TypeError:   # make_mesh without axis_types kwarg
+            pass
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; multi_pod stacks 2 pods = 512 chips.
 
@@ -18,14 +35,12 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests use small host-device meshes)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(tuple(shape), tuple(axes))
 
 
 def data_axes(mesh) -> tuple:

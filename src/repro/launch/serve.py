@@ -1,17 +1,21 @@
 """Serving driver: continuous-batching decode on the real model.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
-      --rate 4 --n-requests 12 --prompt-len 32
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-6b \
+      --rate 4 --n-requests 12 --prompt-len 32     # reduced config default
 
 ``--pallas`` routes decode attention through the flash-decode Pallas kernel
-(interpret mode on CPU, compiled on TPU).
+(interpret mode on CPU, compiled on TPU); with ``--paged`` it becomes the
+block-table read-through paged kernel.  ``--paged`` switches KV residency
+to the page-pool layout (``--page-size``, ``--num-pages`` to oversubscribe)
+and ``--prefill-chunk`` interleaves Sarathi prefill chunks with the hot
+decode batch.
 """
 from __future__ import annotations
 
 import argparse
 
 from repro.models import registry
-from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.engine import EngineConfig, make_engine
 
 
 def main():
@@ -27,6 +31,12 @@ def main():
                     help="flash-decode Pallas kernel for decode attention")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="Sarathi-style chunked prefill")
+    ap.add_argument("--paged", action="store_true",
+                    help="block-table paged KV cache")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="page-pool size (oversubscribe below the dense-"
+                         "equivalent capacity to exercise preemption)")
     args = ap.parse_args()
 
     entry = registry.get(args.arch, reduced=not args.full)
@@ -34,8 +44,11 @@ def main():
                         max_seq=args.prompt_len + args.max_new + 2,
                         max_new_tokens=args.max_new,
                         use_pallas_decode=args.pallas,
-                        prefill_chunk=args.prefill_chunk)
-    eng = ServingEngine(entry, ecfg)
+                        prefill_chunk=args.prefill_chunk,
+                        paged=args.paged,
+                        page_size=args.page_size,
+                        num_pages=args.num_pages)
+    eng = make_engine(entry, ecfg)
     metrics = eng.run_workload(rate_req_s=args.rate,
                                n_requests=args.n_requests,
                                prompt_len=args.prompt_len)

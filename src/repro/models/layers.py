@@ -239,6 +239,23 @@ def decode_attention(q, k_cache, v_cache, lengths):
     return out.reshape(bq, hkv * g, d).astype(q.dtype)
 
 
+def paged_decode_attention(q, k_pool, v_pool, tables, lengths):
+    """Reference decode attention through a block table.
+
+    q: (B, Hq, D); pools: (P+1, page, Hkv, D) with page P a scratch page;
+    tables: (B, nblk) page ids (unmapped entries point at the scratch
+    page); lengths: (B,).  Gathers the slots' pages into a contiguous view
+    and runs the standard masked decode attention — the Pallas paged
+    flash-decode kernel replaces this without materializing the gather.
+    """
+    b = q.shape[0]
+    nblk = tables.shape[1]
+    ps = k_pool.shape[1]
+    k = k_pool[tables].reshape(b, nblk * ps, *k_pool.shape[2:])
+    v = v_pool[tables].reshape(b, nblk * ps, *v_pool.shape[2:])
+    return decode_attention(q, k, v, lengths)
+
+
 # ---------------------------------------------------------------------------
 # FFN
 # ---------------------------------------------------------------------------

@@ -234,6 +234,128 @@ def _prefill_chunked(params: Params, cfg: ArchConfig, tokens: jax.Array,
     return logits, KVCache(k_new, v_new, jnp.full((b,), s, jnp.int32))
 
 
+def extend_step(params: Params, cfg: ArchConfig, tokens: jax.Array,
+                cache: KVCache, tp: int = 1) -> Tuple[jax.Array, KVCache]:
+    """Process a multi-token chunk against an existing cache.
+
+    This is one Sarathi prefill chunk as a standalone jit-able step: the
+    engine's chunk scheduler calls it between decode iterations so a long
+    prompt never stalls the hot decode batch for more than one chunk.
+    ``cache.lengths`` must be uniform across the batch (the engine prefills
+    one request at a time); the chunk is written at that offset and
+    ``lengths`` advances by the chunk length.  Returns the logits of the
+    chunk's last token (so the final chunk yields the first sampled token).
+    """
+    hq, hkv = cfg.padded_heads(tp)
+    b, c = tokens.shape
+    offset = cache.lengths[0]
+    x = L.embed(params["embed"], tokens)                  # (B, C, d)
+    pos = offset + jnp.arange(c)
+    positions = jnp.broadcast_to(pos[None, :], (b, c))
+    if cfg.mrope:
+        positions = jnp.broadcast_to(positions[..., None], (b, c, 3))
+
+    def body(li, carry):
+        x, kc_all, vc_all = carry
+        lp = jax.tree.map(
+            lambda a: lax.dynamic_index_in_dim(a, li, 0, keepdims=False),
+            params["blocks"])
+        h = L.apply_norm(cfg.norm, lp["ln1"], x)
+        q, k, v = L.qkv_project(lp["attn"], h, hq, hkv, cfg.d_head)
+        q = L.apply_rope(q, positions, cfg.rope_theta,
+                         cfg.mrope_sections if cfg.mrope else None)
+        k = L.apply_rope(k, positions, cfg.rope_theta,
+                         cfg.mrope_sections if cfg.mrope else None)
+        kc = lax.dynamic_index_in_dim(kc_all, li, 0, keepdims=False)
+        vc = lax.dynamic_index_in_dim(vc_all, li, 0, keepdims=False)
+        kc = lax.dynamic_update_slice(kc, k, (0, offset, 0, 0))
+        vc = lax.dynamic_update_slice(vc, v, (0, offset, 0, 0))
+        # the causal mask (q_offset) blanks everything past the current
+        # position, including stale/zero future cache slots
+        attn = L.blocked_attention(q, kc, vc, causal=True,
+                                   window=cfg.window, q_offset=offset)
+        x = x + attn.reshape(b, c, hq * cfg.d_head) @ lp["attn"]["wo"]
+        h2 = L.apply_norm(cfg.norm, lp["ln2"], x)
+        if cfg.num_experts:
+            y = L.apply_moe(lp["moe"], h2.reshape(b * c, cfg.d_model), cfg)
+            y = y.reshape(b, c, cfg.d_model)
+        else:
+            y = L.apply_ffn(lp["ffn"], h2, cfg.act)
+        kc_all = lax.dynamic_update_index_in_dim(kc_all, kc, li, 0)
+        vc_all = lax.dynamic_update_index_in_dim(vc_all, vc, li, 0)
+        return (x + y, kc_all, vc_all)
+
+    x, k_new, v_new = lax.fori_loop(0, cfg.num_layers, body,
+                                    (x, cache.k, cache.v),
+                                    unroll=cfg.scan_unroll)
+    h_last = L.apply_norm(cfg.norm, params["ln_f"], x[:, -1])
+    logits = L.unembed(params["embed"], h_last)
+    return logits, KVCache(k_new, v_new, cache.lengths + c)
+
+
+def decode_step_paged(params: Params, cfg: ArchConfig, tokens: jax.Array,
+                      k_pool: jax.Array, v_pool: jax.Array,
+                      tables: jax.Array, lengths: jax.Array, tp: int = 1,
+                      attn_fn=None):
+    """One decode iteration reading/writing KV through a block table.
+
+    k_pool/v_pool: (L, P+1, page, Hkv, D) page pools (page P is scratch);
+    tables: (B, nblk) page ids with unmapped entries pointing at the
+    scratch page; lengths: (B,).  The new token's K/V is scattered into
+    the page holding position ``lengths[b]`` — no contiguous cache is ever
+    materialized, which is the whole point of the paged layout.
+
+    ``attn_fn(q, k_pool_l, v_pool_l, tables, lengths) -> (B, Hq, D)``
+    defaults to the reference gather; pass the Pallas paged flash-decode
+    wrapper to read pages directly from the pool.
+    """
+    hq, hkv = cfg.padded_heads(tp)
+    attn_fn = attn_fn or L.paged_decode_attention
+    ps = k_pool.shape[2]
+    nblk = tables.shape[1]
+    x = L.embed(params["embed"], tokens)                 # (B, H)
+    b = x.shape[0]
+    positions = lengths[:, None]                         # (B, 1)
+    if cfg.mrope:
+        positions = jnp.broadcast_to(positions[..., None], (b, 1, 3))
+    blk = jnp.clip(lengths // ps, 0, nblk - 1)
+    page = jnp.take_along_axis(tables, blk[:, None], axis=1)[:, 0]
+    off = lengths % ps
+
+    def body(li, carry):
+        x, kp, vp = carry
+        lp = jax.tree.map(
+            lambda a: lax.dynamic_index_in_dim(a, li, 0, keepdims=False),
+            params["blocks"])
+        kc = lax.dynamic_index_in_dim(kp, li, 0, keepdims=False)
+        vc = lax.dynamic_index_in_dim(vp, li, 0, keepdims=False)
+        h = L.apply_norm(cfg.norm, lp["ln1"], x[:, None, :])
+        q, k, v = L.qkv_project(lp["attn"], h, hq, hkv, cfg.d_head)
+        q = L.apply_rope(q, positions, cfg.rope_theta,
+                         cfg.mrope_sections if cfg.mrope else None)
+        k = L.apply_rope(k, positions, cfg.rope_theta,
+                         cfg.mrope_sections if cfg.mrope else None)
+        kc = kc.at[page, off].set(k[:, 0])               # (B,) pages/offs
+        vc = vc.at[page, off].set(v[:, 0])
+        attn = attn_fn(q[:, 0], kc, vc, tables, lengths + 1)
+        x = x + attn.reshape(b, hq * cfg.d_head) @ lp["attn"]["wo"]
+        h2 = L.apply_norm(cfg.norm, lp["ln2"], x)
+        if cfg.num_experts:
+            y = L.apply_moe(lp["moe"], h2, cfg)
+        else:
+            y = L.apply_ffn(lp["ffn"], h2, cfg.act)
+        kp = lax.dynamic_update_index_in_dim(kp, kc, li, 0)
+        vp = lax.dynamic_update_index_in_dim(vp, vc, li, 0)
+        return (x + y, kp, vp)
+
+    x, kp, vp = lax.fori_loop(0, cfg.num_layers, body,
+                              (x, k_pool, v_pool),
+                              unroll=cfg.scan_unroll)
+    x = L.apply_norm(cfg.norm, params["ln_f"], x)
+    logits = L.unembed(params["embed"], x)
+    return logits, (kp, vp, lengths + 1)
+
+
 def decode_step(params: Params, cfg: ArchConfig, tokens: jax.Array,
                 cache: KVCache, tp: int = 1,
                 attn_fn=None) -> Tuple[jax.Array, KVCache]:

@@ -1,15 +1,35 @@
 """Continuous-batching serving engine (the real-JAX counterpart of the
 paper's Duplex-style serving simulator in ``repro.core.serving_sim``).
 
-Slot-based KV/state cache: the engine owns a ``max_batch``-deep cache pytree;
-finished requests free their slot and newly prefilled requests are inserted
-with a donated dynamic-update — the decode step always runs at the full slot
-batch (inactive slots are masked by their ``lengths``), which keeps one
-compiled executable hot.
+Two KV/state residency modes:
+
+* **Dense (seed layout)** — the engine owns a ``max_batch``-deep cache
+  pytree reserved at ``max_batch x max_seq``; finished requests free their
+  slot and newly prefilled requests are inserted with a donated
+  dynamic-update.
+* **Paged (block-table layout, ``EngineConfig.paged``)** — sequence-bearing
+  cache leaves live in a page pool (``serving/paged_cache.py``) and each
+  slot maps its context through a block table, so resident KV is
+  proportional to the *actual* context lengths.  Prompt pages are reserved
+  at admission; decode growth allocates on demand, and when the pool is
+  oversubscribed the youngest active request is preempted and re-queued.
+  The decode step either gathers the slot pages into the dense view
+  (reference path, token-exact vs. the dense engine) or — with
+  ``use_pallas_decode`` on attention families — reads pages directly
+  through the block table with the paged flash-decode kernel, never
+  materializing a contiguous cache.
+
+Admission is arrival-driven and prefill can be **chunk-interleaved**
+(Sarathi, the paper's ref [1]): with ``prefill_chunk`` set, ``run_trace``
+advances at most one prompt chunk via ``transformer.extend_step`` between
+decode iterations, so a long prompt never stalls the hot decode batch for
+more than one chunk of work.
 
 Works for every registry family (KVCache / RWKVState / RGState /
 EncDecCache) via a generic batch-axis rule: rank-1 state leaves batch on
-axis 0, higher-rank leaves on axis 1 (layer dim leads).
+axis 0, higher-rank leaves on axis 1 (layer dim leads).  Recurrent
+families have no sequence leaves, so their paged cache degenerates to the
+(already proportional) slot-dense layout.
 
 On CPU this drives reduced configs end-to-end (see examples/serve_decode.py
 and launch/serve.py); under a production mesh the same engine runs with the
@@ -19,13 +39,18 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import registry
+from repro.serving.paged_cache import PagedCache, num_blocks
+
+# transformer-module families: chunkable prefill (extend_step) and the
+# flash-decode attention paths all key off this one set
+_ATTN_FAMILIES = ("dense", "moe", "vlm")
 
 
 @dataclass
@@ -36,6 +61,9 @@ class EngineConfig:
     eos_id: int = -1            # <0: never stops early (synthetic load)
     use_pallas_decode: bool = False   # flash-decode kernel for attention
     prefill_chunk: Optional[int] = None   # Sarathi-style chunked prefill
+    paged: bool = False               # block-table KV residency
+    page_size: int = 16
+    num_pages: Optional[int] = None   # default: dense-equivalent capacity
 
 
 @dataclass
@@ -48,10 +76,20 @@ class RequestState:
     tokens_out: List[int] = field(default_factory=list)
     token_times: List[float] = field(default_factory=list)
     finish_s: float = 0.0
+    first_token_s: float = 0.0
+    preemptions: int = 0
 
     @property
     def done(self) -> bool:
         return self.finish_s > 0.0
+
+    def reset_generation(self) -> None:
+        """Drop generated state for re-queueing after a preemption."""
+        self.slot = -1
+        self.tokens_out = []
+        self.token_times = []
+        self.prefill_done_s = 0.0
+        self.first_token_s = 0.0
 
 
 def _insert_slot(cache, new, slot: int):
@@ -64,6 +102,8 @@ def _insert_slot(cache, new, slot: int):
 
 
 class ServingEngine:
+    """Fixed-slot dense-cache engine (the seed layout)."""
+
     def __init__(self, entry: registry.ArchEntry, ecfg: EngineConfig,
                  tp: int = 1, mesh=None):
         self.entry = entry
@@ -73,15 +113,16 @@ class ServingEngine:
         self.mesh = mesh
         key = jax.random.PRNGKey(0)
         self.params = entry.module.init(key, self.cfg, tp)
-        self.cache = entry.cache_zeros(ecfg.max_batch, ecfg.max_seq, tp)
         self.free_slots = list(range(ecfg.max_batch))
         self.active: Dict[int, RequestState] = {}
         self.completed: List[RequestState] = []
-        self._clock = 0.0
+        self.preemption_count = 0
+        self._requeue: List[RequestState] = []
+        self._prefilling: Optional[dict] = None   # chunk-scheduler state
+        self._init_cache()
 
         attn_fn = None
-        if ecfg.use_pallas_decode and self.cfg.family in ("dense", "moe",
-                                                          "vlm"):
+        if ecfg.use_pallas_decode and self.cfg.family in _ATTN_FAMILIES:
             from repro.kernels import ops as kops
             attn_fn = (lambda q, k, v, lengths:
                        kops.attention_decode(q, k, v, lengths))
@@ -96,7 +137,7 @@ class ServingEngine:
                                                      cfg.d_model),
                                                     jnp.float32),
                                    tp=tp, max_seq=ecfg.max_seq)
-            if cfg.family in ("dense", "moe", "vlm"):
+            if cfg.family in _ATTN_FAMILIES:
                 return mod.prefill(params, cfg, tokens, tp=tp,
                                    max_seq=ecfg.max_seq,
                                    chunk=ecfg.prefill_chunk)
@@ -111,23 +152,63 @@ class ServingEngine:
 
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode, donate_argnums=(1,))
+        if cfg.family in _ATTN_FAMILIES:
+            self._extend = jax.jit(
+                lambda params, tokens, cache:
+                mod.extend_step(params, cfg, tokens, cache, tp=tp))
+        else:
+            self._extend = None
         self._next_tok = np.zeros((ecfg.max_batch,), np.int32)
+
+    # -- cache backend hooks (overridden by PagedServingEngine) ------------
+    def _init_cache(self):
+        self.cache = self.entry.cache_zeros(self.ecfg.max_batch,
+                                            self.ecfg.max_seq, self.tp)
+
+    def _claim(self, prompt_len: int) -> Optional[int]:
+        """Reserve a slot (and, when paged, the prompt's pages)."""
+        if not self.free_slots:
+            return None
+        return self.free_slots.pop()
+
+    def _insert(self, slot: int, new_cache, n_tokens: int) -> None:
+        self.cache = _insert_slot(self.cache, new_cache, slot)
+
+    def _release(self, slot: int) -> None:
+        self.free_slots.append(slot)
+
+    def _decode_batch(self, toks: jax.Array) -> jax.Array:
+        """One decode iteration over all slots; returns logits."""
+        logits, self.cache = self._decode(self.params, self.cache, toks)
+        return logits
+
+    def _pre_decode_grow(self) -> None:
+        """Hook: ensure capacity for the token the step is about to write."""
+
+    def kv_report(self) -> dict:
+        """Resident-KV accounting (tokens of cache reserved vs. in use)."""
+        used = sum(len(r.prompt) + len(r.tokens_out)
+                   for r in self.active.values())
+        cap = self.ecfg.max_batch * self.ecfg.max_seq
+        return {"mode": "dense", "reserved_tokens": cap,
+                "peak_tokens": cap, "used_tokens": used}
 
     # ------------------------------------------------------------------
     def submit(self, req: RequestState) -> bool:
         """Prefill the request into a free slot; False if engine is full."""
-        if not self.free_slots:
+        slot = self._claim(len(req.prompt))
+        if slot is None:
             return False
-        slot = self.free_slots.pop()
         t0 = time.perf_counter()
         tokens = jnp.asarray(req.prompt[None, :])
         logits, new_cache = self._prefill(self.params, tokens)
         logits.block_until_ready()
-        self.cache = _insert_slot(self.cache, new_cache, slot)
+        self._insert(slot, new_cache, len(req.prompt))
         first = int(jnp.argmax(logits[0, : self.cfg.vocab]))
         self._next_tok[slot] = first
         req.slot = slot
         req.prefill_done_s = time.perf_counter() - t0
+        req.first_token_s = time.perf_counter()
         req.tokens_out.append(first)
         self.active[slot] = req
         return True
@@ -136,8 +217,9 @@ class ServingEngine:
         """One decode iteration for all active slots; returns #finished."""
         if not self.active:
             return 0
+        self._pre_decode_grow()
         toks = jnp.asarray(self._next_tok)
-        logits, self.cache = self._decode(self.params, self.cache, toks)
+        logits = self._decode_batch(toks)
         logits.block_until_ready()
         now = time.perf_counter()
         nxt = np.asarray(jnp.argmax(logits[:, : self.cfg.vocab], axis=-1),
@@ -152,42 +234,296 @@ class ServingEngine:
                 req.finish_s = now
                 self.completed.append(req)
                 del self.active[slot]
-                self.free_slots.append(slot)
+                self._release(slot)
                 finished += 1
             else:
                 self._next_tok[slot] = tok
         return finished
 
+    # -- Sarathi chunk scheduler ---------------------------------------
+    def _chunkable(self) -> bool:
+        return (self._extend is not None
+                and self.ecfg.prefill_chunk is not None)
+
+    def _start_chunked(self, req: RequestState) -> bool:
+        """Claim a slot and set up incremental prefill state for ``req``."""
+        if self._prefilling is not None:
+            return False
+        slot = self._claim(len(req.prompt))
+        if slot is None:
+            return False
+        buf = self.entry.cache_zeros(1, self.ecfg.max_seq, self.tp)
+        self._prefilling = {"req": req, "slot": slot, "buf": buf,
+                            "pos": 0, "t0": time.perf_counter(),
+                            "logits": None}
+        return True
+
+    def _prefill_chunk_tick(self) -> bool:
+        """Advance the in-flight prefill by ONE chunk.  True when the
+        request became active (prefill complete)."""
+        st = self._prefilling
+        if st is None:
+            return False
+        req, chunk = st["req"], self.ecfg.prefill_chunk
+        n = len(req.prompt)
+        take = min(chunk, n - st["pos"])
+        toks = jnp.asarray(req.prompt[None, st["pos"]: st["pos"] + take])
+        logits, st["buf"] = self._extend(self.params, toks, st["buf"])
+        logits.block_until_ready()
+        st["pos"] += take
+        st["logits"] = logits
+        if st["pos"] < n:
+            return False
+        # prompt fully consumed: move the buffer into the slot
+        slot = st["slot"]
+        self._insert(slot, st["buf"], n)
+        first = int(jnp.argmax(st["logits"][0, : self.cfg.vocab]))
+        self._next_tok[slot] = first
+        req.slot = slot
+        req.prefill_done_s = time.perf_counter() - st["t0"]
+        req.first_token_s = time.perf_counter()
+        req.tokens_out.append(first)
+        self.active[slot] = req
+        self._prefilling = None
+        return True
+
     # ------------------------------------------------------------------
-    def run_workload(self, *, rate_req_s: float, n_requests: int,
-                     prompt_len: int, seed: int = 0) -> dict:
-        """Poisson arrivals, wall-clock continuous batching; returns metrics."""
-        rng = np.random.default_rng(seed)
-        gaps = rng.exponential(1.0 / rate_req_s, size=n_requests)
-        arrivals = np.cumsum(gaps)
-        prompts = rng.integers(0, self.cfg.vocab,
-                               size=(n_requests, prompt_len)).astype(np.int32)
-        reqs = [RequestState(i, prompts[i], arrival_s=float(arrivals[i]))
-                for i in range(n_requests)]
+    def run_trace(self, reqs: List[RequestState]) -> dict:
+        """Drive an explicit request trace: arrival-driven admission,
+        wall-clock continuous batching, one prefill chunk co-scheduled
+        with each decode iteration when chunking is configured."""
+        n_requests = len(reqs)
         t0 = time.perf_counter()
-        pending = list(reqs)
+        pending = sorted(reqs, key=lambda r: (r.arrival_s, r.rid))
+        interleave = self._chunkable()
+
+        def admit(req) -> bool:
+            return (self._start_chunked(req) if interleave
+                    else self.submit(req))
+
         while len(self.completed) < n_requests:
             now = time.perf_counter() - t0
-            while pending and pending[0].arrival_s <= now and self.free_slots:
-                self.submit(pending.pop(0))
+            while self._requeue:        # preempted requests re-enter first
+                if not admit(self._requeue[0]):
+                    break
+                self._requeue.pop(0)
+            while pending and pending[0].arrival_s <= now \
+                    and not self._requeue:
+                if not admit(pending[0]):
+                    break
+                pending.pop(0)
+            if interleave:
+                self._prefill_chunk_tick()
             if not self.active:
-                if pending:
-                    time.sleep(max(0.0, pending[0].arrival_s - now))
+                if self._prefilling is None:
+                    if pending:
+                        time.sleep(max(0.0, min(0.01,
+                                                pending[0].arrival_s - now)))
                 continue
             self.step()
         wall = time.perf_counter() - t0
-        tbts = []
+        return self._metrics(wall, t0)
+
+    def _metrics(self, wall: float, t0: float) -> dict:
+        tbts, ttfts = [], []
         for r in self.completed:
             if len(r.token_times) > 1:
                 tbts.extend(np.diff(r.token_times))
+            if r.first_token_s > 0.0:
+                ttfts.append(r.first_token_s - t0 - r.arrival_s)
         toks = sum(len(r.tokens_out) for r in self.completed)
+        kv = self.kv_report()
         return {"wall_s": wall, "requests": len(self.completed),
                 "decoded_tokens": toks,
                 "tokens_per_s": toks / wall,
                 "tbt_mean_s": float(np.mean(tbts)) if tbts else 0.0,
-                "tbt_p99_s": float(np.percentile(tbts, 99)) if tbts else 0.0}
+                "tbt_p99_s": float(np.percentile(tbts, 99)) if tbts else 0.0,
+                "ttft_mean_s": float(np.mean(ttfts)) if ttfts else 0.0,
+                "tpot_mean_s": float(np.mean(tbts)) if tbts else 0.0,
+                "preemptions": self.preemption_count,
+                "kv_mode": kv["mode"],
+                "kv_reserved_tokens": kv["reserved_tokens"],
+                "kv_peak_tokens": kv["peak_tokens"]}
+
+    def run_workload(self, *, rate_req_s: float, n_requests: int,
+                     prompt_len: int, seed: int = 0,
+                     prompt_lens: Optional[np.ndarray] = None) -> dict:
+        """Poisson arrivals, wall-clock continuous batching; returns metrics.
+
+        ``prompt_lens`` overrides the constant ``prompt_len`` per request
+        (skewed-length traces)."""
+        reqs = make_trace(self.cfg.vocab, rate_req_s=rate_req_s,
+                          n_requests=n_requests, prompt_len=prompt_len,
+                          seed=seed, prompt_lens=prompt_lens)
+        return self.run_trace(reqs)
+
+
+def make_trace(vocab: int, *, rate_req_s: float, n_requests: int,
+               prompt_len: int, seed: int = 0,
+               prompt_lens: Optional[np.ndarray] = None
+               ) -> List[RequestState]:
+    """Deterministic Poisson trace; identical across engines for a seed."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_req_s, size=n_requests)
+    arrivals = np.cumsum(gaps)
+    if prompt_lens is None:
+        prompt_lens = np.full(n_requests, prompt_len, np.int64)
+    prompts = [rng.integers(0, vocab, size=int(prompt_lens[i])
+                            ).astype(np.int32) for i in range(n_requests)]
+    return [RequestState(i, prompts[i], arrival_s=float(arrivals[i]))
+            for i in range(n_requests)]
+
+
+# ---------------------------------------------------------------------------
+# Paged engine
+# ---------------------------------------------------------------------------
+class PagedServingEngine(ServingEngine):
+    """Block-table KV residency + on-demand page growth + preemption."""
+
+    def _init_cache(self):
+        ecfg = self.ecfg
+        if ecfg.page_size <= 0:
+            raise ValueError(f"page_size must be positive, "
+                             f"got {ecfg.page_size}")
+        max_blocks = num_blocks(ecfg.max_seq, ecfg.page_size)
+        n_pages = ecfg.num_pages or ecfg.max_batch * max_blocks
+        if n_pages < max_blocks:
+            raise ValueError(
+                f"num_pages={n_pages} cannot hold even one max-length "
+                f"context ({max_blocks} pages)")
+        self.paged = PagedCache(self.entry, max_batch=ecfg.max_batch,
+                                max_seq=ecfg.max_seq,
+                                page_size=ecfg.page_size,
+                                num_pages=n_pages, tp=self.tp)
+        self._lengths_host = np.zeros((ecfg.max_batch,), np.int64)
+        self.pages_peak = 0
+        self._paged_decode = None   # built lazily (pallas path)
+
+    # -- capacity ------------------------------------------------------
+    def _claim(self, prompt_len: int) -> Optional[int]:
+        if not self.free_slots:
+            return None
+        if self.paged.has_seq:
+            need = num_blocks(prompt_len + 1, self.ecfg.page_size)
+            if self.paged.alloc.free_pages < need:
+                return None
+        slot = self.free_slots.pop()
+        ok = self.paged.alloc_slot(slot, prompt_len + 1)
+        assert ok, "free_pages check passed but allocation failed"
+        self._note_pages()
+        return slot
+
+    def _insert(self, slot: int, new_cache, n_tokens: int) -> None:
+        self.paged.write_slot(slot, new_cache, n_tokens)
+        self._lengths_host[slot] = n_tokens
+
+    def _release(self, slot: int) -> None:
+        self.paged.free_slot(slot)
+        self._lengths_host[slot] = 0
+        super()._release(slot)
+
+    def _note_pages(self) -> None:
+        self.pages_peak = max(self.pages_peak, self.paged.pages_in_use())
+
+    def kv_report(self) -> dict:
+        used = sum(len(r.prompt) + len(r.tokens_out)
+                   for r in self.active.values())
+        return {"mode": "paged",
+                "reserved_tokens": self.paged.kv_tokens_resident(),
+                "peak_tokens": self.pages_peak * self.ecfg.page_size,
+                "used_tokens": used}
+
+    # -- decode --------------------------------------------------------
+    def _pre_decode_grow(self) -> None:
+        """Grow every active slot to cover the token this step writes;
+        preempt the youngest request when the pool runs dry."""
+        for slot in sorted(self.active):
+            if slot not in self.active:      # preempted mid-loop
+                continue
+            need = num_blocks(int(self._lengths_host[slot]) + 1,
+                              self.ecfg.page_size)
+            if need > self.paged.max_blocks:
+                # preemption can never fix a max_seq overflow — don't
+                # evict innocents on the way to an inevitable failure
+                raise RuntimeError(
+                    f"slot {slot} context {self._lengths_host[slot] + 1} "
+                    f"exceeds max_seq={self.paged.max_seq}")
+            while not self.paged.extend_slot(
+                    slot, int(self._lengths_host[slot]) + 1):
+                victim = self._pick_victim(exclude=slot)
+                if victim is None:
+                    raise RuntimeError(
+                        "page pool exhausted with no preemptible request")
+                self._preempt(victim)
+        self._note_pages()
+
+    def _pick_victim(self, exclude: int) -> Optional[int]:
+        cands = [s for s in self.active if s != exclude]
+        if not cands:
+            return None
+        # youngest request (latest arrival) loses its pages
+        return max(cands, key=lambda s: (self.active[s].arrival_s,
+                                         self.active[s].rid))
+
+    def _preempt(self, slot: int) -> None:
+        req = self.active.pop(slot)
+        self._release(slot)
+        req.reset_generation()
+        req.preemptions += 1
+        self.preemption_count += 1
+        self._requeue.append(req)
+
+    def _decode_batch(self, toks: jax.Array) -> jax.Array:
+        ecfg = self.ecfg
+        lengths_pre = self._lengths_host.copy()
+        active = np.zeros((ecfg.max_batch,), bool)
+        for s in self.active:
+            active[s] = True
+        if (ecfg.use_pallas_decode and self.paged.has_seq
+                and self.cfg.family in _ATTN_FAMILIES):
+            logits = self._decode_paged_pallas(toks, active)
+        else:
+            cache = self.paged.gather()
+            logits, new_cache = self._decode(self.params, cache, toks)
+            self.paged.scatter_token(new_cache, lengths_pre, active)
+        self._lengths_host[active] += 1
+        return logits
+
+    def _decode_paged_pallas(self, toks: jax.Array,
+                             active: np.ndarray) -> jax.Array:
+        """Block-table read-through decode: no dense gather materialized."""
+        from repro.kernels import ops as kops
+        mod, cfg, tp = self.entry.module, self.cfg, self.tp
+        if self._paged_decode is None:
+            attn_fn = (lambda q, kc, vc, t, ln:
+                       kops.attention_decode_paged(q, kc, vc, t, ln))
+            self._paged_decode = jax.jit(
+                lambda params, tokens, kp, vp, tables, lengths:
+                mod.decode_step_paged(params, cfg, tokens, kp, vp,
+                                      tables, lengths, tp=tp,
+                                      attn_fn=attn_fn),
+                donate_argnums=(2, 3))
+        seq_idx = [i for i, s in enumerate(self.paged.is_seq) if s]
+        assert len(seq_idx) == 2, "pallas paged decode expects k/v pools"
+        ki, vi = seq_idx
+        store = list(self.paged.store)
+        lengths = jnp.asarray(
+            np.where(active, self._lengths_host, 0), jnp.int32)
+        logits, (kp, vp, new_len) = self._paged_decode(
+            self.params, toks, store[ki], store[vi],
+            self.paged.tables_device(), lengths)
+        store[ki], store[vi] = kp, vp
+        # the lengths leaf is the only rank-1 non-seq leaf the step advances
+        li = [i for i, s in enumerate(self.paged.is_seq)
+              if not s and store[i].ndim == 1]
+        assert len(li) == 1
+        store[li[0]] = jnp.where(jnp.asarray(active), new_len,
+                                 store[li[0]])
+        self.paged.store = store
+        return logits
+
+
+def make_engine(entry: registry.ArchEntry, ecfg: EngineConfig,
+                tp: int = 1, mesh=None) -> ServingEngine:
+    cls = PagedServingEngine if ecfg.paged else ServingEngine
+    return cls(entry, ecfg, tp=tp, mesh=mesh)

@@ -1,0 +1,383 @@
+"""Paged (block-table) KV/state cache for the serving engine.
+
+vLLM/L3-style paged residency: instead of reserving a dense
+``max_batch x max_seq`` cache, sequence-bearing cache leaves live in a pool
+of fixed-size pages and each slot owns a block table mapping its logical
+context positions to pages.  KV memory held by a request is then
+proportional to its actual context length, which is what lets the engine
+admit long-context / skewed-length traffic without reserving for the worst
+case.
+
+Generic across all four registry state families via shape probing: we
+``eval_shape`` the family's ``cache_zeros`` at two different ``max_seq``
+values — leaves whose shape changes are *sequence leaves* and get paged
+(KVCache.k/v, EncDecCache.self_k/self_v); everything else (RWKV/RG
+recurrent state, cross-attention caches, ``lengths``) is O(1) per request
+and stays slot-dense.  For the recurrent families there are no sequence
+leaves at all and the paged cache degenerates to the dense layout, which is
+already proportional.
+
+Layout: a sequence leaf ``(L, B, S, ...)`` (batch axis 1, seq axis 2 per
+the engine's batch-axis rule) becomes a pool ``(L, P+1, page, ...)``; page
+index ``P`` is a scratch/trash page so masked scatters and gathers of
+unmapped table entries (-1) never touch live data.  Block tables are a host
+``(max_batch, max_blocks)`` int32 array mirrored to device on change.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gemm import ceil_div
+
+
+# ---------------------------------------------------------------------------
+# Host-side block allocator
+# ---------------------------------------------------------------------------
+class PageAllocator:
+    """Free-list page allocator (host side, O(1) alloc/free).
+
+    Pages are plain ints ``0..num_pages-1``.  ``alloc`` returns ``None``
+    (allocating nothing) when the request cannot be satisfied — admission
+    control, not an error.
+    """
+
+    def __init__(self, num_pages: int):
+        if num_pages <= 0:
+            raise ValueError("num_pages must be positive")
+        self.num_pages = num_pages
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self._used: set = set()
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return len(self._used)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        if n < 0:
+            raise ValueError("alloc size must be >= 0")
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._used.update(pages)
+        return pages
+
+    def free(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            if p not in self._used:
+                raise ValueError(f"double free / foreign page {p}")
+            self._used.remove(p)
+            self._free.append(p)
+
+    def reset(self) -> None:
+        self._free = list(range(self.num_pages - 1, -1, -1))
+        self._used.clear()
+
+
+# ---------------------------------------------------------------------------
+# Shape probing: which leaves page, and where
+# ---------------------------------------------------------------------------
+SEQ_AXIS = 2    # engine batch-axis rule: (L, B, S, ...) for seq leaves
+BATCH_AXIS = 1
+
+
+def probe_seq_leaves(entry, max_batch: int, tp: int = 1) -> List[bool]:
+    """True per flattened cache leaf iff its shape depends on ``max_seq``."""
+    sa = jax.eval_shape(lambda: entry.cache_zeros(max_batch, 16, tp))
+    sb = jax.eval_shape(lambda: entry.cache_zeros(max_batch, 32, tp))
+    la, _ = jax.tree.flatten(sa)
+    lb, _ = jax.tree.flatten(sb)
+    out = []
+    for a, b in zip(la, lb):
+        if a.shape == b.shape:
+            out.append(False)
+        else:
+            diff = [i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                    if x != y]
+            if diff != [SEQ_AXIS]:
+                raise ValueError(
+                    f"seq leaf with unsupported layout {a.shape} vs "
+                    f"{b.shape}: expected the seq axis at {SEQ_AXIS}")
+            out.append(True)
+    return out
+
+
+def num_blocks(n_tokens: int, page_size: int) -> int:
+    return ceil_div(n_tokens, page_size)
+
+
+# ---------------------------------------------------------------------------
+# Device-side paged cache
+# ---------------------------------------------------------------------------
+@dataclass
+class PagedCache:
+    """Page pools + block tables for one engine instance.
+
+    ``store`` is the cache pytree where every sequence leaf has been
+    replaced by its pool ``(L, P+1, page, ...)``; non-sequence leaves keep
+    their dense slot layout.  ``tables`` is host-resident; ``tables_dev``
+    is refreshed lazily before any gather/scatter.
+    """
+    entry: Any
+    max_batch: int
+    max_seq: int
+    page_size: int
+    num_pages: int
+    tp: int = 1
+
+    def __post_init__(self):
+        if self.page_size <= 0:
+            raise ValueError(f"page_size must be positive, "
+                             f"got {self.page_size}")
+        if self.max_seq % self.page_size:
+            # round the logical window up so tables tile it exactly
+            self.max_seq = num_blocks(self.max_seq,
+                                      self.page_size) * self.page_size
+        self.max_blocks = self.max_seq // self.page_size
+        self.alloc = PageAllocator(self.num_pages)
+        self.tables = np.full((self.max_batch, self.max_blocks), -1,
+                              np.int32)
+        self._tables_dev = None
+        dense = self.entry.cache_zeros(self.max_batch, self.page_size,
+                                       self.tp)
+        leaves, self.treedef = jax.tree.flatten(dense)
+        self.is_seq = probe_seq_leaves(self.entry, self.max_batch, self.tp)
+        store = []
+        for leaf, seq in zip(leaves, self.is_seq):
+            if seq:
+                # (L, B, page, ...) -> (L, P+1, page, ...): drop the batch
+                # axis, add the page axis (+1 scratch page at index P)
+                shape = (leaf.shape[0], self.num_pages + 1,
+                         self.page_size) + leaf.shape[3:]
+                store.append(jnp.zeros(shape, leaf.dtype))
+            else:
+                store.append(leaf)   # dense slot layout, as allocated
+        # non-seq leaves don't depend on max_seq, so the probe-sized
+        # cache_zeros call above produced them at exactly the right shape
+        self.store = store
+        # recurrent families have no sequence leaves: their per-request
+        # state is O(1) and lives slot-dense, so they consume no pages
+        self.has_seq = any(self.is_seq)
+
+    # -- block-table bookkeeping -------------------------------------------
+    def _invalidate(self):
+        self._tables_dev = None
+
+    def tables_device(self) -> jax.Array:
+        if self._tables_dev is None:
+            # unmapped entries -> scratch page P (safe for gather/scatter)
+            t = np.where(self.tables < 0, self.num_pages, self.tables)
+            self._tables_dev = jnp.asarray(t, jnp.int32)
+        return self._tables_dev
+
+    def blocks_of(self, slot: int) -> List[int]:
+        return [int(p) for p in self.tables[slot] if p >= 0]
+
+    def pages_in_use(self) -> int:
+        return self.alloc.used_pages
+
+    def kv_tokens_resident(self) -> int:
+        """Capacity (in tokens) of all allocated pages."""
+        return self.alloc.used_pages * self.page_size
+
+    def alloc_slot(self, slot: int, n_tokens: int) -> bool:
+        """Allocate pages to cover ``n_tokens`` for an empty slot."""
+        if not self.has_seq:
+            return True
+        assert not self.blocks_of(slot), "slot already mapped"
+        pages = self.alloc.alloc(num_blocks(n_tokens, self.page_size))
+        if pages is None:
+            return False
+        self.tables[slot, : len(pages)] = pages
+        self._invalidate()
+        return True
+
+    def extend_slot(self, slot: int, n_tokens: int) -> bool:
+        """Grow a slot's mapping to cover ``n_tokens`` total (on-demand
+        decode growth).  No-op if already covered."""
+        if not self.has_seq:
+            return True
+        have = len(self.blocks_of(slot))
+        need = num_blocks(n_tokens, self.page_size)
+        if need <= have:
+            return True
+        if need > self.max_blocks:
+            return False
+        pages = self.alloc.alloc(need - have)
+        if pages is None:
+            return False
+        self.tables[slot, have:need] = pages
+        self._invalidate()
+        return True
+
+    def free_slot(self, slot: int) -> None:
+        pages = self.blocks_of(slot)
+        if pages:
+            self.alloc.free(pages)
+        self.tables[slot, :] = -1
+        self._invalidate()
+
+    def reset(self) -> None:
+        self.alloc.reset()
+        self.tables[:, :] = -1
+        self._invalidate()
+
+    # -- device ops --------------------------------------------------------
+    def gather(self) -> Any:
+        """Assemble the dense ``(L, B, max_seq, ...)`` cache view.
+
+        The reference decode path runs the ordinary ``decode_step`` on this
+        view (token-exact vs. the dense engine); the Pallas paged path
+        skips this and reads pages through the block table instead.
+        """
+        tables = self.tables_device()
+        out = []
+        for leaf, seq in zip(self.store, self.is_seq):
+            if seq:
+                g = _gather_pool(leaf, tables)
+                out.append(g)
+            else:
+                out.append(leaf)
+        return jax.tree.unflatten(self.treedef, out)
+
+    def scatter_token(self, cache: Any, positions: np.ndarray,
+                      active: np.ndarray) -> None:
+        """Write back one decode step.
+
+        ``cache`` is the updated dense view returned by ``decode_step``;
+        the single new token per slot was written at ``positions[b]``
+        (the pre-step length).  Sequence leaves scatter just that token
+        into their pools; non-sequence leaves (recurrent state, lengths)
+        are replaced wholesale.  ``active`` masks slots whose write should
+        land in the scratch page.
+        """
+        tables = self.tables_device()
+        pos = jnp.asarray(np.where(active, positions, 0), jnp.int32)
+        act = jnp.asarray(active)
+        leaves, _ = jax.tree.flatten(cache)
+        new_store = []
+        for pool, leaf, seq in zip(self.store, leaves, self.is_seq):
+            if seq:
+                new_store.append(
+                    _scatter_token_jit(pool, leaf, tables, pos, act,
+                                       self.page_size))
+            else:
+                new_store.append(leaf)
+        self.store = new_store
+
+    def write_slot(self, slot: int, cache1: Any, n_tokens: int) -> None:
+        """Insert a freshly prefilled request (batch-1 cache) into ``slot``.
+
+        Sequence leaves are chopped into pages and scattered to the slot's
+        block table; non-sequence leaves use the dense ``_insert_slot``
+        rule (rank-1 -> axis 0, else axis 1).
+        """
+        pages = self.blocks_of(slot)
+        need = num_blocks(n_tokens, self.page_size)
+        if self.has_seq:
+            assert len(pages) >= need, \
+                "write_slot without enough pages mapped"
+        idx = jnp.asarray(pages[:need], jnp.int32)
+        leaves, _ = jax.tree.flatten(cache1)
+        new_store = []
+        for pool, leaf, seq in zip(self.store, leaves, self.is_seq):
+            if seq:
+                new_store.append(
+                    _write_pages(pool, leaf, idx, need, self.page_size))
+            else:
+                if leaf.ndim == 1:
+                    new_store.append(pool.at[slot].set(leaf[0]))
+                else:
+                    new_store.append(pool.at[:, slot].set(leaf[:, 0]))
+        self.store = new_store
+
+    def defrag(self) -> Dict[int, int]:
+        """Compact live pages to the lowest indices.
+
+        Returns the old->new mapping applied.  Pool data is permuted on
+        device; block tables and the allocator free list are rebuilt so the
+        logical contents (``gather()``) are unchanged.
+        """
+        live = sorted(self.alloc._used)
+        mapping = {old: new for new, old in enumerate(live)}
+        if all(o == n for o, n in mapping.items()):
+            return mapping
+        perm = np.arange(self.num_pages + 1)
+        for old, new in mapping.items():
+            perm[new] = old
+        perm_dev = jnp.asarray(perm, jnp.int32)
+        self.store = [
+            _permute_pool(pool, perm_dev) if seq else pool
+            for pool, seq in zip(self.store, self.is_seq)]
+        lut = np.full(self.num_pages + 1, -1, np.int32)
+        for old, new in mapping.items():
+            lut[old] = new
+        self.tables = np.where(self.tables < 0, -1,
+                               lut[np.maximum(self.tables, 0)]
+                               ).astype(np.int32)
+        self.alloc._used = set(range(len(live)))
+        self.alloc._free = list(range(self.num_pages - 1, len(live) - 1, -1))
+        self._invalidate()
+        return mapping
+
+
+# ---------------------------------------------------------------------------
+# jitted pool primitives (shapes static per engine instance)
+# ---------------------------------------------------------------------------
+@jax.jit
+def _gather_pool(pool: jax.Array, tables: jax.Array) -> jax.Array:
+    """pool (L, P+1, ps, ...) + tables (B, nblk) -> (L, B, nblk*ps, ...)."""
+    g = pool[:, tables]                      # (L, B, nblk, ps, ...)
+    l, b, nblk, ps = g.shape[:4]
+    return g.reshape((l, b, nblk * ps) + g.shape[4:])
+
+
+@jax.jit
+def _permute_pool(pool: jax.Array, perm: jax.Array) -> jax.Array:
+    return pool[:, perm]
+
+
+@functools.partial(jax.jit, static_argnums=(3,))
+def _write_pages_impl(pool, leaf, idx, page_size):
+    # leaf (L, 1, S, ...) with S >= need*ps; chop into (L, need, ps, ...)
+    l = leaf.shape[0]
+    need = idx.shape[0]
+    chunk = leaf[:, 0, : need * page_size]
+    chunk = chunk.reshape((l, need, page_size) + leaf.shape[3:])
+    return pool.at[:, idx].set(chunk)
+
+
+def _write_pages(pool, leaf, idx, need, page_size):
+    s = leaf.shape[SEQ_AXIS]
+    if s < need * page_size:                 # pad ragged tail to page edge
+        pad = [(0, 0)] * leaf.ndim
+        pad[SEQ_AXIS] = (0, need * page_size - s)
+        leaf = jnp.pad(leaf, pad)
+    return _write_pages_impl(pool, leaf, idx, page_size)
+
+
+@jax.jit
+def _scatter_token_jit(pool, leaf, tables, pos, active, page_size):
+    """Scatter leaf[:, b, pos[b]] into pool at the page holding pos[b]."""
+    b = leaf.shape[BATCH_AXIS]
+    blk = pos // page_size                   # (B,)
+    off = pos % page_size
+    nblk = tables.shape[1]
+    blk = jnp.clip(blk, 0, nblk - 1)
+    page = jnp.take_along_axis(tables, blk[:, None], axis=1)[:, 0]
+    trash = pool.shape[1] - 1                # scratch page index P
+    page = jnp.where(active, page, trash)
+    val = jnp.take_along_axis(
+        leaf, pos.reshape((1, b) + (1,) * (leaf.ndim - 2)),
+        axis=SEQ_AXIS)                       # (L, B, 1, ...)
+    val = jnp.squeeze(val, axis=SEQ_AXIS)    # (L, B, ...)
+    return pool.at[:, page, off].set(val)

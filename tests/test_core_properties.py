@@ -3,6 +3,9 @@ workload shape (monotonicity, conservation, bound-respecting)."""
 import dataclasses
 
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (BufferConfig, Dataflow, Gemm, best_logical_shape,

@@ -1,0 +1,287 @@
+"""Paged KV-cache tests: block-allocator invariants (deterministic +
+hypothesis property tests), block-table gather round-trips, defrag, and
+token-exact equivalence of the paged engine against the dense-slot engine
+on a recorded request trace."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import registry
+from repro.serving.engine import (EngineConfig, PagedServingEngine,
+                                  RequestState, ServingEngine, make_engine,
+                                  make_trace)
+from repro.serving.paged_cache import (PageAllocator, PagedCache,
+                                       num_blocks, probe_seq_leaves)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAS_HYPOTHESIS, reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator: deterministic invariants
+# ---------------------------------------------------------------------------
+def test_allocator_no_double_allocation():
+    a = PageAllocator(8)
+    p1 = a.alloc(3)
+    p2 = a.alloc(5)
+    assert p1 is not None and p2 is not None
+    assert not (set(p1) & set(p2))
+    assert a.free_pages == 0
+    assert a.alloc(1) is None          # exhausted: refuse, don't raise
+
+
+def test_allocator_free_returns_all_pages():
+    a = PageAllocator(6)
+    p = a.alloc(4)
+    a.free(p)
+    assert a.free_pages == 6
+    assert a.used_pages == 0
+    assert a.alloc(6) is not None      # everything reusable
+
+
+def test_allocator_failed_alloc_leaves_state():
+    a = PageAllocator(4)
+    a.alloc(3)
+    before = (a.free_pages, a.used_pages)
+    assert a.alloc(2) is None
+    assert (a.free_pages, a.used_pages) == before
+
+
+def test_allocator_double_free_rejected():
+    a = PageAllocator(4)
+    p = a.alloc(2)
+    a.free(p)
+    with pytest.raises(ValueError):
+        a.free(p)
+
+
+@needs_hypothesis
+@settings(max_examples=100, deadline=None) if HAS_HYPOTHESIS else (lambda f: f)
+@given(st.lists(st.tuples(st.booleans(), st.integers(0, 6)), max_size=40)) \
+    if HAS_HYPOTHESIS else (lambda f: f)
+def test_allocator_conservation(ops):
+    """Any alloc/free interleaving conserves pages and never double-books."""
+    a = PageAllocator(16)
+    held = []
+    for is_alloc, n in ops:
+        if is_alloc:
+            got = a.alloc(n)
+            if got is not None:
+                assert len(got) == n
+                held.append(got)
+        elif held:
+            a.free(held.pop())
+    flat = [p for grp in held for p in grp]
+    assert len(flat) == len(set(flat))                 # no double-allocation
+    assert a.used_pages == len(flat)
+    assert a.free_pages + a.used_pages == 16           # conservation
+    for grp in held:
+        a.free(grp)
+    assert a.free_pages == 16                          # free returns all
+
+
+# ---------------------------------------------------------------------------
+# PagedCache: probing, gather round-trip, defrag
+# ---------------------------------------------------------------------------
+def _filled_cache(entry, n_tokens, fill):
+    """Batch-1 cache whose sequence leaves are `fill` on the valid prefix."""
+    c = entry.cache_zeros(1, n_tokens, 1)
+    leaves, treedef = jax.tree.flatten(c)
+    seq = probe_seq_leaves(entry, 1)
+    out = []
+    for leaf, s in zip(leaves, seq):
+        if s:
+            out.append(jnp.full_like(leaf, fill))
+        elif leaf.ndim == 1:
+            out.append(jnp.full_like(leaf, n_tokens))  # lengths
+        else:
+            out.append(leaf)
+    return jax.tree.unflatten(treedef, out)
+
+
+@pytest.mark.parametrize("arch,expect_paged", [
+    ("yi-6b", True), ("rwkv6-7b", False), ("recurrentgemma-9b", False),
+    ("whisper-small", True)])
+def test_probe_families(arch, expect_paged):
+    entry = registry.get(arch, reduced=True)
+    pc = PagedCache(entry, max_batch=2, max_seq=32, page_size=8,
+                    num_pages=8)
+    assert pc.has_seq == expect_paged
+
+
+def test_gather_roundtrip_and_isolation():
+    """What is written into a slot's pages comes back exactly through the
+    block table, and neighbouring slots don't see it."""
+    entry = registry.get("yi-6b", reduced=True)
+    pc = PagedCache(entry, max_batch=3, max_seq=32, page_size=8,
+                    num_pages=12)
+    assert pc.alloc_slot(0, 20) and pc.alloc_slot(2, 9)
+    pc.write_slot(0, _filled_cache(entry, 20, 3), 20)
+    pc.write_slot(2, _filled_cache(entry, 9, 5), 9)
+    dense = pc.gather()
+    for leaf, s in zip(jax.tree.leaves(dense), pc.is_seq):
+        if not s:
+            continue
+        np.testing.assert_array_equal(np.asarray(leaf[:, 0, :20]), 3)
+        np.testing.assert_array_equal(np.asarray(leaf[:, 2, :9]), 5)
+        np.testing.assert_array_equal(np.asarray(leaf[:, 1, :]), 0)
+    # free slot 0, its pages are reusable, slot 2 untouched
+    pc.free_slot(0)
+    assert pc.pages_in_use() == num_blocks(9, 8)
+    dense = pc.gather()
+    for leaf, s in zip(jax.tree.leaves(dense), pc.is_seq):
+        if s:
+            np.testing.assert_array_equal(np.asarray(leaf[:, 2, :9]), 5)
+
+
+def test_defrag_preserves_contents():
+    entry = registry.get("yi-6b", reduced=True)
+    pc = PagedCache(entry, max_batch=3, max_seq=32, page_size=8,
+                    num_pages=12)
+    for slot, (n, fill) in enumerate([(20, 3), (12, 7), (9, 5)]):
+        assert pc.alloc_slot(slot, n)
+        pc.write_slot(slot, _filled_cache(entry, n, fill), n)
+    pc.free_slot(1)                     # punch a hole in the page space
+    before = jax.tree.map(np.asarray, pc.gather())
+    mapping = pc.defrag()
+    after = jax.tree.map(np.asarray, pc.gather())
+    for b, a in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+        np.testing.assert_array_equal(b, a)
+    live = sorted(mapping.values())
+    assert live == list(range(len(live)))   # compacted to lowest indices
+
+
+@needs_hypothesis
+@settings(max_examples=20, deadline=None) if HAS_HYPOTHESIS else (lambda f: f)
+@given(st.lists(st.integers(1, 30), min_size=1, max_size=3),
+       st.integers(0, 10_000)) if HAS_HYPOTHESIS else (lambda f: f)
+def test_blocktable_gather_roundtrip_property(lens, seed):
+    """Block-table gather round-trips arbitrary per-slot contents."""
+    entry = registry.get("yi-6b", reduced=True)
+    pc = PagedCache(entry, max_batch=3, max_seq=32, page_size=8,
+                    num_pages=12)
+    rng = np.random.default_rng(seed)
+    fills = rng.integers(1, 100, size=len(lens))
+    for slot, (n, fill) in enumerate(zip(lens, fills)):
+        assert pc.alloc_slot(slot, n)
+        pc.write_slot(slot, _filled_cache(entry, n, int(fill)), n)
+    dense = pc.gather()
+    for leaf, s in zip(jax.tree.leaves(dense), pc.is_seq):
+        if not s:
+            continue
+        for slot, (n, fill) in enumerate(zip(lens, fills)):
+            np.testing.assert_array_equal(np.asarray(leaf[:, slot, :n]),
+                                          int(fill))
+
+
+# ---------------------------------------------------------------------------
+# Engine equivalence + proportional residency
+# ---------------------------------------------------------------------------
+SKEWED_LENS = np.array([9, 17, 5, 30, 12, 24])
+
+
+def _run(entry, reqs, **over):
+    ecfg = EngineConfig(max_batch=3, max_seq=48, max_new_tokens=5, **over)
+    eng = make_engine(entry, ecfg)
+    m = eng.run_trace(reqs)
+    return eng, m
+
+
+def _trace(entry, seed=3):
+    return make_trace(entry.config.vocab, rate_req_s=100.0,
+                      n_requests=len(SKEWED_LENS), prompt_len=0, seed=seed,
+                      prompt_lens=SKEWED_LENS)
+
+
+@pytest.mark.slow
+def test_paged_engine_matches_dense_tokens():
+    """Identical traces through both engines -> identical tokens, while the
+    paged engine's resident KV stays proportional to the live contexts."""
+    entry = registry.get("yi-6b", reduced=True)
+    dense_eng, dense_m = _run(entry, _trace(entry))
+    paged_eng, paged_m = _run(entry, _trace(entry), paged=True, page_size=8)
+    dense_toks = {r.rid: r.tokens_out for r in dense_eng.completed}
+    paged_toks = {r.rid: r.tokens_out for r in paged_eng.completed}
+    assert dense_toks == paged_toks
+    # proportionality: peak pages never exceed what the 3 longest contexts
+    # (max_batch concurrently live requests, +1-token write slack) need,
+    # and beat the dense max_batch x max_seq reservation
+    per_req = sorted(num_blocks(int(n) + 6, 8) for n in SKEWED_LENS)[-3:]
+    assert paged_eng.pages_peak <= sum(per_req)
+    assert paged_m["kv_peak_tokens"] < dense_m["kv_reserved_tokens"]
+
+
+@pytest.mark.slow
+def test_paged_pallas_readthrough_matches():
+    """The block-table Pallas decode path emits the same tokens as the
+    dense engine (no gather is materialized on this path)."""
+    entry = registry.get("yi-6b", reduced=True)
+    dense_eng, _ = _run(entry, _trace(entry))
+    pal_eng, _ = _run(entry, _trace(entry), paged=True, page_size=8,
+                      use_pallas_decode=True)
+    assert ({r.rid: r.tokens_out for r in dense_eng.completed}
+            == {r.rid: r.tokens_out for r in pal_eng.completed})
+
+
+def test_single_request_pages_proportional():
+    """One 9-token prompt on an 8-token page: exactly 2 pages at admission
+    (prompt + first-token slack), growing only when decode crosses a page
+    boundary."""
+    entry = registry.get("yi-6b", reduced=True)
+    ecfg = EngineConfig(max_batch=2, max_seq=48, max_new_tokens=8,
+                        paged=True, page_size=8)
+    eng = make_engine(entry, ecfg)
+    req = RequestState(0, np.arange(9, dtype=np.int32) % entry.config.vocab)
+    assert eng.submit(req)
+    assert eng.paged.pages_in_use() == num_blocks(9 + 1, 8) == 2
+    for _ in range(6):                 # decode to 15 tokens: still 2 pages
+        eng.step()
+    assert eng.paged.pages_in_use() == 2
+    eng.step()                         # token 16 crosses into page 3
+    assert req.done and eng.paged.pages_in_use() == 0   # freed on finish
+
+
+@pytest.mark.slow
+def test_oversubscribed_pool_preempts_and_completes():
+    """A pool below the dense-equivalent capacity forces preemption but the
+    trace still completes with every request served."""
+    entry = registry.get("yi-6b", reduced=True)
+    ecfg = EngineConfig(max_batch=3, max_seq=48, max_new_tokens=6,
+                        paged=True, page_size=8, num_pages=8)
+    eng = make_engine(entry, ecfg)
+    # two 28-token prompts each reserve 4 of the 8 pages (cover 32
+    # tokens); decode reaches context 33, so the older request's growth
+    # must evict the younger one
+    reqs = make_trace(entry.config.vocab, rate_req_s=1000.0, n_requests=5,
+                      prompt_len=0, seed=7,
+                      prompt_lens=np.array([28, 28, 9, 9, 9]))
+    m = eng.run_trace(reqs)
+    assert m["requests"] == 5
+    assert m["preemptions"] >= 1
+    assert m["kv_peak_tokens"] <= 8 * 8
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["rwkv6-7b", "whisper-small"])
+def test_paged_engine_other_families(arch):
+    """The paged engine serves recurrent and enc-dec families via the same
+    batch-axis rule (recurrent states consume zero pages)."""
+    entry = registry.get(arch, reduced=True)
+    ecfg = EngineConfig(max_batch=2, max_seq=48, max_new_tokens=4,
+                        paged=True, page_size=8)
+    eng = make_engine(entry, ecfg)
+    m = eng.run_trace(make_trace(entry.config.vocab, rate_req_s=100.0,
+                                 n_requests=4, prompt_len=12, seed=1))
+    assert m["requests"] == 4
+    if arch == "rwkv6-7b":
+        assert m["kv_peak_tokens"] == 0

@@ -1,10 +1,13 @@
 """Property tests for the scheduling mechanisms added during calibration:
 multi-port slice packing (§4.2.1), the joint attention search, TP operator
 sharding, and the sharding-rule invariants."""
-import hypothesis.strategies as st
 import jax
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core.gemm import Dataflow, Gemm, ceil_div

@@ -8,6 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow
+
 from repro.data.pipeline import DataConfig, TokenPipeline
 from repro.launch.train import train
 from repro.models import registry
