@@ -26,6 +26,7 @@ MODULES = [
     "kernel_bench",        # Pallas kernels vs oracles + chosen mappings
     "tpu_roofline",        # deliverable (g): dry-run roofline table
     "serving_paged",       # paged vs dense engine on a skewed-length trace
+    "serving_shared",      # refcounted prefix sharing on shared-prompt traces
 ]
 
 

@@ -6,21 +6,28 @@ the attention path.
 ``--paged`` switches both engines to the block-table paged KV cache (the
 RWKV state has no sequence axis, so its paged cache degenerates to the
 slot-dense layout and the comparison shows zero pages); ``--prefill-chunk``
-co-schedules Sarathi prefill chunks with the hot decode batch.
+co-schedules Sarathi prefill chunks with the hot decode batch; ``--share``
+turns on refcounted prefix sharing and drives a shared-system-prompt trace
+(16 common + 8 unique tokens per request) so the dedup ratio is visible.
 
   PYTHONPATH=src python examples/serve_decode.py
   PYTHONPATH=src python examples/serve_decode.py --pallas --paged
+  PYTHONPATH=src python examples/serve_decode.py --paged --share
 """
 import argparse
 
 from repro.models import registry
-from repro.serving.engine import EngineConfig, make_engine
+from repro.serving.engine import (EngineConfig, make_engine,
+                                  make_shared_prefix_trace)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--pallas", action="store_true")
     ap.add_argument("--paged", action="store_true")
+    ap.add_argument("--share", action="store_true",
+                    help="prefix sharing on a shared-prompt trace "
+                         "(implies --paged)")
     ap.add_argument("--prefill-chunk", type=int, default=None)
     ap.add_argument("--n-requests", type=int, default=10)
     ap.add_argument("--rate", type=float, default=6.0)
@@ -30,16 +37,26 @@ def main():
         entry = registry.get(arch, reduced=True)
         ecfg = EngineConfig(max_batch=4, max_seq=64, max_new_tokens=12,
                             use_pallas_decode=args.pallas,
-                            paged=args.paged, page_size=16,
+                            paged=args.paged or args.share, page_size=16,
+                            prefix_sharing=args.share,
                             prefill_chunk=args.prefill_chunk)
         eng = make_engine(entry, ecfg)
-        m = eng.run_workload(rate_req_s=args.rate,
-                             n_requests=args.n_requests, prompt_len=24)
+        if args.share:
+            reqs = make_shared_prefix_trace(entry.config.vocab,
+                                            rate_req_s=args.rate,
+                                            n_requests=args.n_requests,
+                                            prefix_len=16, tail_len=8)
+            m = eng.run_trace(reqs)
+        else:
+            m = eng.run_workload(rate_req_s=args.rate,
+                                 n_requests=args.n_requests, prompt_len=24)
+        extra = (f"  dedup x{m['kv_dedup_ratio_peak']:.2f} "
+                 f"cow {m['cow_forks']}" if args.share else "")
         print(f"[serve_decode] {arch:10s} {m['requests']} reqs  "
               f"{m['decoded_tokens']} toks  {m['tokens_per_s']:.1f} tok/s  "
               f"TBT mean {m['tbt_mean_s'] * 1e3:.1f}ms "
               f"p99 {m['tbt_p99_s'] * 1e3:.1f}ms  "
-              f"kv={m['kv_mode']} peak {m['kv_peak_tokens']} tok")
+              f"kv={m['kv_mode']} peak {m['kv_peak_tokens']} tok{extra}")
 
 
 if __name__ == "__main__":

@@ -53,6 +53,7 @@ class ServingReport:
     kv_peak_tokens: int = 0
     max_decode_stall_s: float = 0.0  # longest gap decode waited on prefill
     preemptions: int = 0
+    dedup_ratio: float = 1.0        # peak logical/physical pages (sharing)
 
     def normalized_to(self, base: "ServingReport") -> Tuple[float, float]:
         return (self.e2e_mean_s / base.e2e_mean_s,
@@ -106,7 +107,9 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
                      seed: int = 0, cache_mode: str = "dense",
                      page_size: int = 16, num_pages: Optional[int] = None,
                      prefill_chunk: Optional[int] = None,
-                     prefill_on_device: bool = False) -> ServingReport:
+                     prefill_on_device: bool = False,
+                     prefix_sharing: bool = False,
+                     shared_prefix_len: int = 0) -> ServingReport:
     """Analytical serving simulation.
 
     Mirrors the real-JAX engine's two policy axes (same defaults keep the
@@ -124,6 +127,16 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
       for the full prompt; with it, at most one chunk of prefill is
       co-scheduled per decode iteration (Sarathi), bounding the stall
       (reported as ``max_decode_stall_s``).
+    * ``prefix_sharing`` (paged only): every request's first
+      ``shared_prefix_len`` prompt tokens are a common system prompt whose
+      *full* pages are resident once and mapped by every concurrent
+      holder (the engine's refcounted trie, analytically).  The first
+      admission materializes the communal prefix pages; later admissions
+      reserve only their unshared tail, and the prefix pages free when the
+      last holder releases.  ``dedup_ratio`` reports the peak
+      logical/physical page ratio — the admissible-batch multiplier per
+      resident page.  Tails are unique, so copy-on-write forks never
+      trigger in this analytical mirror.
     """
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(1.0 / rate_req_s, size=n_requests)
@@ -147,6 +160,16 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
         raise ValueError(
             f"num_pages={pages_cap} cannot hold even one full context "
             f"({_pages(input_len + output_len, page_size)} pages)")
+    if prefix_sharing and not paged:
+        raise ValueError("prefix_sharing requires cache_mode='paged'")
+    if shared_prefix_len > input_len:
+        raise ValueError(f"shared_prefix_len={shared_prefix_len} exceeds "
+                         f"input_len={input_len}")
+    # only whole pages of the common prefix dedupe (tails are unique)
+    shared_full = (shared_prefix_len // page_size
+                   if paged and prefix_sharing else 0)
+    sharing = shared_full > 0
+    prefix_refs = 0                 # analytical refcount on prefix pages
     free_pages = pages_cap
     dense_reserved = max_batch * (input_len + output_len)
 
@@ -163,23 +186,32 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
     kv_peak = 0
     max_stall = 0.0
     preemptions = 0
+    dedup_peak = 1.0
 
     def admit_pages(r: Request) -> bool:
-        nonlocal free_pages
+        nonlocal free_pages, prefix_refs
         if not paged:
             return True
-        need = _pages(r.input_len + 1, page_size)
-        if free_pages < need:
+        need = _pages(r.input_len + 1, page_size) - shared_full
+        # the first holder also materializes the communal prefix pages
+        extra = shared_full if (sharing and prefix_refs == 0) else 0
+        if free_pages < need + extra:
             return False
-        free_pages -= need
+        free_pages -= need + extra
         r.pages_held = need
+        if sharing:
+            prefix_refs += 1
         return True
 
     def release(r: Request) -> None:
-        nonlocal free_pages
+        nonlocal free_pages, prefix_refs
         if paged:
             free_pages += r.pages_held
             r.pages_held = 0
+            if sharing:
+                prefix_refs -= 1
+                if prefix_refs == 0:    # last holder frees the prefix
+                    free_pages += shared_full
 
     def preempt_youngest(exclude: Request) -> bool:
         nonlocal preemptions
@@ -233,6 +265,12 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
         reserved = ((pages_cap - free_pages) * page_size if paged
                     else dense_reserved)
         kv_peak = max(kv_peak, reserved)
+        if sharing and free_pages < pages_cap:
+            # logical pages mapped across block tables vs. physical pages
+            logical = (sum(r.pages_held for r in active)
+                       + prefix_refs * shared_full)
+            dedup_peak = max(dedup_peak,
+                             logical / (pages_cap - free_pages))
         dt = it + stall
         if dt > 0 and reserved > 0:
             util_integral += (used / reserved) * dt
@@ -243,7 +281,8 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
             if r not in active:     # preempted earlier in this iteration
                 continue
             if paged:
-                need = _pages(r.ctx() + 1, page_size) - r.pages_held
+                need = (_pages(r.ctx() + 1, page_size)
+                        - r.pages_held - shared_full)
                 while need > free_pages:
                     if not preempt_youngest(exclude=r):
                         raise RuntimeError("page pool too small for one "
@@ -280,4 +319,5 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
                                        if util_time else 0.0),
                          kv_peak_tokens=int(kv_peak),
                          max_decode_stall_s=max_stall,
-                         preemptions=preemptions)
+                         preemptions=preemptions,
+                         dedup_ratio=dedup_peak)

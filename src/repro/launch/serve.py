@@ -8,14 +8,18 @@
 block-table read-through paged kernel.  ``--paged`` switches KV residency
 to the page-pool layout (``--page-size``, ``--num-pages`` to oversubscribe)
 and ``--prefill-chunk`` interleaves Sarathi prefill chunks with the hot
-decode batch.
+decode batch.  ``--prefix-sharing`` adds refcounted prompt-prefix pages
+with copy-on-write; combine it with ``--shared-prefix N`` to drive a
+shared-system-prompt trace (every prompt = N common tokens + a unique
+tail) and watch the dedup ratio in the report.
 """
 from __future__ import annotations
 
 import argparse
 
 from repro.models import registry
-from repro.serving.engine import EngineConfig, make_engine
+from repro.serving.engine import (EngineConfig, make_engine,
+                                  make_shared_prefix_trace)
 
 
 def main():
@@ -37,7 +41,18 @@ def main():
     ap.add_argument("--num-pages", type=int, default=None,
                     help="page-pool size (oversubscribe below the dense-"
                          "equivalent capacity to exercise preemption)")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="refcounted prompt-prefix page sharing + CoW")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="common system-prompt tokens per request "
+                         "(0: fully unique prompts)")
+    ap.add_argument("--defrag-threshold", type=float, default=0.5,
+                    help="fragmentation fraction that triggers pool "
+                         "defrag (negative disables)")
     args = ap.parse_args()
+    if args.prefix_sharing and not args.paged:
+        ap.error("--prefix-sharing requires --paged (the dense engine "
+                 "has no page tables to share)")
 
     entry = registry.get(args.arch, reduced=not args.full)
     ecfg = EngineConfig(max_batch=args.max_batch,
@@ -47,11 +62,24 @@ def main():
                         prefill_chunk=args.prefill_chunk,
                         paged=args.paged,
                         page_size=args.page_size,
-                        num_pages=args.num_pages)
+                        num_pages=args.num_pages,
+                        prefix_sharing=args.prefix_sharing,
+                        defrag_threshold=(None if args.defrag_threshold < 0
+                                          else args.defrag_threshold))
     eng = make_engine(entry, ecfg)
-    metrics = eng.run_workload(rate_req_s=args.rate,
-                               n_requests=args.n_requests,
-                               prompt_len=args.prompt_len)
+    if args.shared_prefix > 0:
+        # total prompt length stays --prompt-len: N shared + unique tail
+        prefix = min(args.shared_prefix, args.prompt_len - 1)
+        reqs = make_shared_prefix_trace(entry.config.vocab,
+                                        rate_req_s=args.rate,
+                                        n_requests=args.n_requests,
+                                        prefix_len=prefix,
+                                        tail_len=args.prompt_len - prefix)
+        metrics = eng.run_trace(reqs)
+    else:
+        metrics = eng.run_workload(rate_req_s=args.rate,
+                                   n_requests=args.n_requests,
+                                   prompt_len=args.prompt_len)
     print(f"[serve] {args.arch}: {metrics}")
 
 

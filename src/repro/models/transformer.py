@@ -318,8 +318,13 @@ def decode_step_paged(params: Params, cfg: ArchConfig, tokens: jax.Array,
     positions = lengths[:, None]                         # (B, 1)
     if cfg.mrope:
         positions = jnp.broadcast_to(positions[..., None], (b, 1, 3))
-    blk = jnp.clip(lengths // ps, 0, nblk - 1)
+    blk = lengths // ps
+    # a position past the mapped window must write to the scratch page P,
+    # not alias (via clipping) onto the window's last live page
+    in_window = blk < nblk
+    blk = jnp.clip(blk, 0, nblk - 1)
     page = jnp.take_along_axis(tables, blk[:, None], axis=1)[:, 0]
+    page = jnp.where(in_window, page, k_pool.shape[1] - 1)
     off = lengths % ps
 
     def body(li, carry):

@@ -64,6 +64,10 @@ class EngineConfig:
     paged: bool = False               # block-table KV residency
     page_size: int = 16
     num_pages: Optional[int] = None   # default: dense-equivalent capacity
+    prefix_sharing: bool = False      # refcounted prompt-prefix pages + CoW
+    # run PagedCache.defrag() when the fraction of holes below the
+    # high-water page index exceeds this (None disables the trigger)
+    defrag_threshold: Optional[float] = 0.5
 
 
 @dataclass
@@ -165,8 +169,10 @@ class ServingEngine:
         self.cache = self.entry.cache_zeros(self.ecfg.max_batch,
                                             self.ecfg.max_seq, self.tp)
 
-    def _claim(self, prompt_len: int) -> Optional[int]:
-        """Reserve a slot (and, when paged, the prompt's pages)."""
+    def _claim(self, req: RequestState) -> Optional[int]:
+        """Reserve a slot (and, when paged, the prompt's pages; with
+        prefix sharing, leading pages already resident are mapped instead
+        of allocated)."""
         if not self.free_slots:
             return None
         return self.free_slots.pop()
@@ -196,7 +202,7 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def submit(self, req: RequestState) -> bool:
         """Prefill the request into a free slot; False if engine is full."""
-        slot = self._claim(len(req.prompt))
+        slot = self._claim(req)
         if slot is None:
             return False
         t0 = time.perf_counter()
@@ -249,7 +255,7 @@ class ServingEngine:
         """Claim a slot and set up incremental prefill state for ``req``."""
         if self._prefilling is not None:
             return False
-        slot = self._claim(len(req.prompt))
+        slot = self._claim(req)
         if slot is None:
             return False
         buf = self.entry.cache_zeros(1, self.ecfg.max_seq, self.tp)
@@ -343,7 +349,12 @@ class ServingEngine:
                 "preemptions": self.preemption_count,
                 "kv_mode": kv["mode"],
                 "kv_reserved_tokens": kv["reserved_tokens"],
-                "kv_peak_tokens": kv["peak_tokens"]}
+                "kv_peak_tokens": kv["peak_tokens"],
+                "kv_logical_peak_pages": kv.get("logical_peak_pages", 0),
+                "kv_shared_pages": kv.get("shared_pages", 0),
+                "kv_dedup_ratio_peak": kv.get("dedup_ratio_peak", 1.0),
+                "cow_forks": kv.get("cow_forks", 0),
+                "defrag_runs": kv.get("defrag_runs", 0)}
 
     def run_workload(self, *, rate_req_s: float, n_requests: int,
                      prompt_len: int, seed: int = 0,
@@ -374,6 +385,27 @@ def make_trace(vocab: int, *, rate_req_s: float, n_requests: int,
             for i in range(n_requests)]
 
 
+def make_shared_prefix_trace(vocab: int, *, rate_req_s: float,
+                             n_requests: int, prefix_len: int,
+                             tail_len: int, seed: int = 0
+                             ) -> List[RequestState]:
+    """Poisson trace where every prompt is one common prefix plus a unique
+    tail — the shared-system-prompt workload prefix sharing exists for.
+    ``prefix_len=0`` degenerates to fully unique prompts.  Deterministic
+    per seed, so the same trace can be replayed through dense, paged, and
+    sharing engines for token-exact comparison."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_req_s, size=n_requests)
+    arrivals = np.cumsum(gaps)
+    prefix = rng.integers(0, vocab, size=prefix_len).astype(np.int32)
+    reqs = []
+    for i in range(n_requests):
+        tail = rng.integers(0, vocab, size=tail_len).astype(np.int32)
+        reqs.append(RequestState(i, np.concatenate([prefix, tail]),
+                                 arrival_s=float(arrivals[i])))
+    return reqs
+
+
 # ---------------------------------------------------------------------------
 # Paged engine
 # ---------------------------------------------------------------------------
@@ -394,22 +426,29 @@ class PagedServingEngine(ServingEngine):
         self.paged = PagedCache(self.entry, max_batch=ecfg.max_batch,
                                 max_seq=ecfg.max_seq,
                                 page_size=ecfg.page_size,
-                                num_pages=n_pages, tp=self.tp)
+                                num_pages=n_pages, tp=self.tp,
+                                share=ecfg.prefix_sharing)
+        # PagedCache rounds max_seq up to a whole number of pages; adopt
+        # the rounded value so prefill buffers, gather views and occupancy
+        # math all agree with the table capacity (kv_report asserts this)
+        ecfg.max_seq = self.paged.max_seq
         self._lengths_host = np.zeros((ecfg.max_batch,), np.int64)
         self.pages_peak = 0
+        self.pages_logical_peak = 0
+        self.dedup_ratio_peak = 1.0
+        self.defrag_runs = 0
         self._paged_decode = None   # built lazily (pallas path)
 
     # -- capacity ------------------------------------------------------
-    def _claim(self, prompt_len: int) -> Optional[int]:
+    def _claim(self, req: RequestState) -> Optional[int]:
         if not self.free_slots:
             return None
-        if self.paged.has_seq:
-            need = num_blocks(prompt_len + 1, self.ecfg.page_size)
-            if self.paged.alloc.free_pages < need:
-                return None
         slot = self.free_slots.pop()
-        ok = self.paged.alloc_slot(slot, prompt_len + 1)
-        assert ok, "free_pages check passed but allocation failed"
+        tokens = req.prompt if self.paged.share else None
+        if not self.paged.alloc_slot(slot, len(req.prompt) + 1,
+                                     tokens=tokens):
+            self.free_slots.append(slot)
+            return None
         self._note_pages()
         return slot
 
@@ -420,18 +459,47 @@ class PagedServingEngine(ServingEngine):
     def _release(self, slot: int) -> None:
         self.paged.free_slot(slot)
         self._lengths_host[slot] = 0
+        self._maybe_defrag()
         super()._release(slot)
 
+    def _maybe_defrag(self) -> None:
+        """Fragmentation-threshold defrag trigger: compact the page pool
+        when the live set has drifted too far from the lowest indices (the
+        gather's DMA pattern is densest on a compact pool)."""
+        thr = self.ecfg.defrag_threshold
+        if thr is None or not self.paged.has_seq:
+            return
+        if self.paged.fragmentation() > thr:
+            self.paged.defrag()
+            self.defrag_runs += 1
+
     def _note_pages(self) -> None:
-        self.pages_peak = max(self.pages_peak, self.paged.pages_in_use())
+        physical = self.paged.pages_in_use()
+        self.pages_peak = max(self.pages_peak, physical)
+        logical = self.paged.logical_pages()
+        self.pages_logical_peak = max(self.pages_logical_peak, logical)
+        if physical:
+            self.dedup_ratio_peak = max(self.dedup_ratio_peak,
+                                        logical / physical)
 
     def kv_report(self) -> dict:
+        # _init_cache reconciled the engine's max_seq with the paged
+        # cache's page-rounded window; occupancy math is wrong if the two
+        # (or the table capacity) ever drift apart again
+        assert (self.paged.max_seq == self.ecfg.max_seq
+                == self.paged.max_blocks * self.ecfg.page_size), \
+            "engine max_seq out of sync with page-table capacity"
         used = sum(len(r.prompt) + len(r.tokens_out)
                    for r in self.active.values())
-        return {"mode": "paged",
-                "reserved_tokens": self.paged.kv_tokens_resident(),
-                "peak_tokens": self.pages_peak * self.ecfg.page_size,
-                "used_tokens": used}
+        rep = {"mode": "paged",
+               "reserved_tokens": self.paged.kv_tokens_resident(),
+               "peak_tokens": self.pages_peak * self.ecfg.page_size,
+               "used_tokens": used,
+               "logical_peak_pages": self.pages_logical_peak,
+               "dedup_ratio_peak": self.dedup_ratio_peak,
+               "defrag_runs": self.defrag_runs}
+        rep.update(self.paged.sharing_report())
+        return rep
 
     # -- decode --------------------------------------------------------
     def _pre_decode_grow(self) -> None:
@@ -455,6 +523,18 @@ class PagedServingEngine(ServingEngine):
                     raise RuntimeError(
                         "page pool exhausted with no preemptible request")
                 self._preempt(victim)
+            if self.paged.share:
+                # the write may target a shared page (identical-prompt
+                # tail): fork it now so the jitted scatter / Pallas kernel
+                # only ever writes exclusively-owned pages
+                while not self.paged.cow_for_write(
+                        slot, int(self._lengths_host[slot])):
+                    victim = self._pick_victim(exclude=slot)
+                    if victim is None:
+                        raise RuntimeError(
+                            "page pool exhausted with no preemptible "
+                            "request (copy-on-write fork)")
+                    self._preempt(victim)
         self._note_pages()
 
     def _pick_victim(self, exclude: int) -> Optional[int]:
@@ -509,9 +589,16 @@ class PagedServingEngine(ServingEngine):
         store = list(self.paged.store)
         lengths = jnp.asarray(
             np.where(active, self._lengths_host, 0), jnp.int32)
+        # a lane outside the decode batch can still have pages mapped (a
+        # slot mid chunked-prefill — with sharing, possibly live *shared*
+        # prefix pages): the kernel writes each lane's K/V unconditionally,
+        # so route every inactive lane's window to the scratch page
+        t = np.where(self.paged.tables < 0, self.paged.num_pages,
+                     self.paged.tables)
+        t = np.where(active[:, None], t, self.paged.num_pages)
         logits, (kp, vp, new_len) = self._paged_decode(
             self.params, toks, store[ki], store[vi],
-            self.paged.tables_device(), lengths)
+            jnp.asarray(t, jnp.int32), lengths)
         store[ki], store[vi] = kp, vp
         # the lengths leaf is the only rank-1 non-seq leaf the step advances
         li = [i for i, s in enumerate(self.paged.is_seq)

@@ -8,6 +8,19 @@ proportional to its actual context length, which is what lets the engine
 admit long-context / skewed-length traffic without reserving for the worst
 case.
 
+Prefix sharing (``share=True``): pages carry refcounts and a host-side
+prefix trie maps full pages of prompt tokens to the physical page already
+holding their KV, so a new request's leading prompt pages are *mapped*
+onto existing pages instead of recomputed storage — the shared-system-
+prompt workload multiplies admissible batch size per resident page.  A
+request with an *identical* prompt additionally shares the ragged tail
+page; since both requests will decode-write into that page, any write
+targeting a page with refcount > 1 must first ``fork_page`` (copy-on-write:
+copy the page on device and remap just that slot's table entry).  The
+engine performs that fork in its pre-decode pass, so the jitted scatter
+and the Pallas read-through kernel only ever write exclusively-owned
+pages.
+
 Generic across all four registry state families via shape probing: we
 ``eval_shape`` the family's ``cache_zeros`` at two different ``max_seq``
 values — leaves whose shape changes are *sequence leaves* and get paged
@@ -40,11 +53,15 @@ from repro.core.gemm import ceil_div
 # Host-side block allocator
 # ---------------------------------------------------------------------------
 class PageAllocator:
-    """Free-list page allocator (host side, O(1) alloc/free).
+    """Refcounted free-list page allocator (host side, O(1) alloc/free).
 
     Pages are plain ints ``0..num_pages-1``.  ``alloc`` returns ``None``
     (allocating nothing) when the request cannot be satisfied — admission
-    control, not an error.
+    control, not an error.  Freshly allocated pages start at refcount 1;
+    prefix sharing ``incref``s them when a second block table maps the same
+    page, and ``decref``/``free`` return a page to the free list only when
+    the last reference drops — no page is ever freed while its refcount is
+    still positive.
     """
 
     def __init__(self, num_pages: int):
@@ -52,7 +69,7 @@ class PageAllocator:
             raise ValueError("num_pages must be positive")
         self.num_pages = num_pages
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
-        self._used: set = set()
+        self._refs: Dict[int, int] = {}
 
     @property
     def free_pages(self) -> int:
@@ -60,7 +77,22 @@ class PageAllocator:
 
     @property
     def used_pages(self) -> int:
-        return len(self._used)
+        return len(self._refs)
+
+    @property
+    def shared_pages(self) -> int:
+        """Pages currently mapped by more than one block-table entry."""
+        return sum(1 for rc in self._refs.values() if rc > 1)
+
+    def live_pages(self) -> List[int]:
+        return sorted(self._refs)
+
+    def highest_used(self) -> int:
+        """Highest allocated page index (-1 when empty)."""
+        return max(self._refs, default=-1)
+
+    def refcount(self, page: int) -> int:
+        return self._refs.get(page, 0)
 
     def alloc(self, n: int) -> Optional[List[int]]:
         if n < 0:
@@ -68,19 +100,172 @@ class PageAllocator:
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
-        self._used.update(pages)
+        for p in pages:
+            self._refs[p] = 1
         return pages
 
+    def incref(self, page: int) -> None:
+        if page not in self._refs:
+            raise ValueError(f"incref of unallocated page {page}")
+        self._refs[page] += 1
+
+    def decref(self, page: int) -> bool:
+        """Drop one reference; True iff the page was returned to the free
+        list (refcount reached zero)."""
+        rc = self._refs.get(page)
+        if rc is None:
+            raise ValueError(f"double free / foreign page {page}")
+        if rc == 1:
+            del self._refs[page]
+            self._free.append(page)
+            return True
+        self._refs[page] = rc - 1
+        return False
+
     def free(self, pages: Sequence[int]) -> None:
+        """Drop one reference per page (frees those reaching zero)."""
         for p in pages:
-            if p not in self._used:
-                raise ValueError(f"double free / foreign page {p}")
-            self._used.remove(p)
-            self._free.append(p)
+            self.decref(p)
+
+    def rebuild(self, refcounts: Dict[int, int]) -> None:
+        """Reset the allocator to an explicit live set (the public defrag
+        API).
+
+        ``refcounts`` maps live page id -> its refcount.  The free list is
+        rebuilt in descending index order, so subsequent allocations hand
+        out the lowest free indices first — the same LIFO invariant a
+        freshly constructed allocator starts with.
+        """
+        for p, rc in refcounts.items():
+            if not 0 <= p < self.num_pages:
+                raise ValueError(f"page {p} out of range")
+            if rc <= 0:
+                raise ValueError(f"page {p} has non-positive refcount {rc}")
+        self._refs = dict(refcounts)
+        self._free = [p for p in range(self.num_pages - 1, -1, -1)
+                      if p not in self._refs]
 
     def reset(self) -> None:
         self._free = list(range(self.num_pages - 1, -1, -1))
-        self._used.clear()
+        self._refs.clear()
+
+
+# ---------------------------------------------------------------------------
+# Host-side prompt-prefix trie (page-granular)
+# ---------------------------------------------------------------------------
+class _TrieNode:
+    __slots__ = ("children", "partial")
+
+    def __init__(self):
+        # full-page token chunk -> (page id, subtree)
+        self.children: Dict[bytes, Tuple[int, "_TrieNode"]] = {}
+        # trailing sub-page token chunk -> page id
+        self.partial: Dict[bytes, int] = {}
+
+
+def _chunk_key(tokens: np.ndarray) -> bytes:
+    # canonical dtype so int32 prompts and int64 literals key identically
+    return np.ascontiguousarray(tokens, dtype=np.int64).tobytes()
+
+
+class PrefixIndex:
+    """Page-granular prompt-prefix trie (host side).
+
+    Each edge keys one full page of prompt tokens (raw token bytes — exact
+    matching, no hash collisions) and carries the physical page holding
+    that chunk's KV.  A node's ``partial`` table maps a trailing sub-page
+    chunk to its page, which is what lets two requests with *identical*
+    prompts share the ragged tail page — the case that exercises
+    copy-on-write, since both holders decode-write into that page.
+
+    Entries are registered only after the page contents have actually been
+    written (``PagedCache`` commits at insert time, not at admission) and
+    are dropped when the page's last reference is released, so a hit always
+    points at live, fully materialized prompt KV.  CoW forks and decode
+    growth pages are never registered: their contents diverge from the
+    prompt.
+    """
+
+    def __init__(self):
+        self.root = _TrieNode()
+        # page -> (owning node, edge key, is_partial) for O(1) removal and
+        # defrag renumbering
+        self._by_page: Dict[int, Tuple[_TrieNode, bytes, bool]] = {}
+
+    def __len__(self) -> int:
+        return len(self._by_page)
+
+    def match(self, tokens: np.ndarray, page_size: int) -> List[int]:
+        """Longest shared prefix of ``tokens`` in whole pages, plus the
+        ragged tail page when the remainder matches exactly."""
+        node, pages = self.root, []
+        k = len(tokens) // page_size
+        for i in range(k):
+            hit = node.children.get(
+                _chunk_key(tokens[i * page_size:(i + 1) * page_size]))
+            if hit is None:
+                return pages
+            pages.append(hit[0])
+            node = hit[1]
+        tail = tokens[k * page_size:]
+        if len(tail):
+            page = node.partial.get(_chunk_key(tail))
+            if page is not None:
+                pages.append(page)
+        return pages
+
+    def register(self, tokens: np.ndarray, pages: Sequence[int],
+                 page_size: int) -> None:
+        """Publish ``pages`` (page-chunked KV of ``tokens``) for reuse.
+
+        First-writer-wins: chunks already present keep their existing page
+        (the caller's duplicate copy simply stays private); chunks missing
+        from the walk are inserted with the caller's page.
+        """
+        node = self.root
+        k = len(tokens) // page_size
+        for i in range(k):
+            key = _chunk_key(tokens[i * page_size:(i + 1) * page_size])
+            hit = node.children.get(key)
+            if hit is None:
+                child = _TrieNode()
+                node.children[key] = (pages[i], child)
+                self._by_page[pages[i]] = (node, key, False)
+                node = child
+            else:
+                node = hit[1]
+        tail = tokens[k * page_size:]
+        if len(tail) and k < len(pages):
+            key = _chunk_key(tail)
+            if key not in node.partial:
+                node.partial[key] = pages[k]
+                self._by_page[pages[k]] = (node, key, True)
+
+    def remove(self, page: int) -> None:
+        """Forget a freed page.  Children of a removed full-page edge are
+        unreachable afterwards, which is safe: any request mapping a child
+        chunk also held a reference on this page, so the whole chain dies
+        together."""
+        info = self._by_page.pop(page, None)
+        if info is None:
+            return
+        node, key, is_partial = info
+        if is_partial:
+            node.partial.pop(key, None)
+        else:
+            node.children.pop(key, None)
+
+    def remap(self, mapping: Dict[int, int]) -> None:
+        """Apply a defrag old->new page renumbering in place."""
+        by_page = {}
+        for old, (node, key, is_partial) in self._by_page.items():
+            new = mapping.get(old, old)
+            if is_partial:
+                node.partial[key] = new
+            else:
+                node.children[key] = (new, node.children[key][1])
+            by_page[new] = (node, key, is_partial)
+        self._by_page = by_page
 
 
 # ---------------------------------------------------------------------------
@@ -126,6 +311,12 @@ class PagedCache:
     replaced by its pool ``(L, P+1, page, ...)``; non-sequence leaves keep
     their dense slot layout.  ``tables`` is host-resident; ``tables_dev``
     is refreshed lazily before any gather/scatter.
+
+    ``max_seq`` is rounded up to a whole number of pages so the block
+    tables tile the logical window exactly; callers that size buffers or
+    occupancy math off ``max_seq`` must read it back after construction
+    (the engine adopts the rounded value and asserts agreement in
+    ``kv_report``).
     """
     entry: Any
     max_batch: int
@@ -133,6 +324,7 @@ class PagedCache:
     page_size: int
     num_pages: int
     tp: int = 1
+    share: bool = False
 
     def __post_init__(self):
         if self.page_size <= 0:
@@ -167,6 +359,12 @@ class PagedCache:
         # recurrent families have no sequence leaves: their per-request
         # state is O(1) and lives slot-dense, so they consume no pages
         self.has_seq = any(self.is_seq)
+        self.prefix = PrefixIndex() if self.share else None
+        # leading table entries mapped onto shared pages at admission —
+        # write_slot skips re-writing them (their KV is already resident)
+        self.shared_count = np.zeros((self.max_batch,), np.int64)
+        self._pending_prompt: Dict[int, np.ndarray] = {}
+        self.cow_forks = 0
 
     # -- block-table bookkeeping -------------------------------------------
     def _invalidate(self):
@@ -189,15 +387,57 @@ class PagedCache:
         """Capacity (in tokens) of all allocated pages."""
         return self.alloc.used_pages * self.page_size
 
-    def alloc_slot(self, slot: int, n_tokens: int) -> bool:
-        """Allocate pages to cover ``n_tokens`` for an empty slot."""
+    def logical_pages(self) -> int:
+        """Block-table entries mapped across all slots (>= physical pages
+        whenever prefix sharing deduplicates)."""
+        return int((self.tables >= 0).sum())
+
+    def fragmentation(self) -> float:
+        """Fraction of holes below the high-water page index (0 = the live
+        set is compact at the lowest indices)."""
+        used = self.alloc.used_pages
+        if used == 0:
+            return 0.0
+        return 1.0 - used / (self.alloc.highest_used() + 1)
+
+    def sharing_report(self) -> Dict[str, Any]:
+        logical = self.logical_pages()
+        physical = self.alloc.used_pages
+        return {"logical_pages": logical,
+                "physical_pages": physical,
+                "shared_pages": self.alloc.shared_pages,
+                "dedup_ratio": logical / physical if physical else 1.0,
+                "cow_forks": self.cow_forks}
+
+    def alloc_slot(self, slot: int, n_tokens: int,
+                   tokens: Optional[np.ndarray] = None) -> bool:
+        """Allocate pages to cover ``n_tokens`` for an empty slot.
+
+        With ``share=True`` and the prompt ``tokens`` given, the leading
+        pages whose token chunks are already resident are *mapped* onto
+        the existing shared pages (incref) and only the unshared tail is
+        allocated.  Publication of the new pages into the trie is deferred
+        to ``write_slot``, so a prefix can never be matched before its KV
+        has actually been written.  Atomic: on failure nothing is mapped,
+        incref'd, or allocated.
+        """
         if not self.has_seq:
             return True
         assert not self.blocks_of(slot), "slot already mapped"
-        pages = self.alloc.alloc(num_blocks(n_tokens, self.page_size))
-        if pages is None:
+        need = num_blocks(n_tokens, self.page_size)
+        shared: List[int] = []
+        if self.share and tokens is not None and len(tokens):
+            shared = self.prefix.match(np.asarray(tokens), self.page_size)
+        fresh = self.alloc.alloc(need - len(shared))
+        if fresh is None:
             return False
+        for p in shared:
+            self.alloc.incref(p)
+        pages = shared + fresh
         self.tables[slot, : len(pages)] = pages
+        self.shared_count[slot] = len(shared)
+        if self.share and tokens is not None:
+            self._pending_prompt[slot] = np.asarray(tokens).copy()
         self._invalidate()
         return True
 
@@ -220,16 +460,67 @@ class PagedCache:
         return True
 
     def free_slot(self, slot: int) -> None:
-        pages = self.blocks_of(slot)
-        if pages:
-            self.alloc.free(pages)
+        for p in self.blocks_of(slot):
+            if self.alloc.decref(p) and self.prefix is not None:
+                self.prefix.remove(p)
         self.tables[slot, :] = -1
+        self.shared_count[slot] = 0
+        self._pending_prompt.pop(slot, None)
         self._invalidate()
 
     def reset(self) -> None:
         self.alloc.reset()
         self.tables[:, :] = -1
+        self.shared_count[:] = 0
+        self._pending_prompt.clear()
+        if self.share:
+            self.prefix = PrefixIndex()
+        self.cow_forks = 0
         self._invalidate()
+
+    # -- copy-on-write -----------------------------------------------------
+    def cow_for_write(self, slot: int, pos: int) -> bool:
+        """Ensure the page a write at ``pos`` will hit is exclusively owned.
+
+        Called by the engine before every decode scatter.  Forks (copies)
+        the page when its refcount is > 1; returns False only when the fork
+        could not allocate a page — the caller preempts a victim and
+        retries.  No-op for unmapped / out-of-window targets (those land in
+        the scratch page) and for already-exclusive pages.
+        """
+        if not self.has_seq:
+            return True
+        blk = pos // self.page_size
+        if blk >= self.max_blocks:
+            return True
+        page = int(self.tables[slot, blk])
+        if page < 0 or self.alloc.refcount(page) <= 1:
+            return True
+        return self.fork_page(slot, blk)
+
+    def fork_page(self, slot: int, blk: int) -> bool:
+        """Copy-on-write fork: give ``slot`` a private copy of the page at
+        table entry ``blk``.  The original page (and its trie entry) stays
+        in place for the remaining holders."""
+        old = int(self.tables[slot, blk])
+        assert old >= 0, "fork of unmapped table entry"
+        got = self.alloc.alloc(1)
+        if got is None:
+            return False
+        new = got[0]
+        self.store = [
+            _copy_page(pool, old, new) if seq else pool
+            for pool, seq in zip(self.store, self.is_seq)]
+        self.tables[slot, blk] = new
+        if blk < self.shared_count[slot]:
+            self.shared_count[slot] = blk
+        if self.alloc.decref(old) and self.prefix is not None:
+            # last holder raced away (defensive: cow_for_write only forks
+            # at refcount > 1, so this should not trigger)
+            self.prefix.remove(old)
+        self.cow_forks += 1
+        self._invalidate()
+        return True
 
     # -- device ops --------------------------------------------------------
     def gather(self) -> Any:
@@ -258,7 +549,10 @@ class PagedCache:
         (the pre-step length).  Sequence leaves scatter just that token
         into their pools; non-sequence leaves (recurrent state, lengths)
         are replaced wholesale.  ``active`` masks slots whose write should
-        land in the scratch page.
+        land in the scratch page, as do writes past a slot's mapped
+        window.  With sharing enabled the caller must have run
+        ``cow_for_write`` for every active slot first, so no write here
+        ever lands on a page with refcount > 1.
         """
         tables = self.tables_device()
         pos = jnp.asarray(np.where(active, positions, 0), jnp.int32)
@@ -278,36 +572,53 @@ class PagedCache:
         """Insert a freshly prefilled request (batch-1 cache) into ``slot``.
 
         Sequence leaves are chopped into pages and scattered to the slot's
-        block table; non-sequence leaves use the dense ``_insert_slot``
-        rule (rank-1 -> axis 0, else axis 1).
+        block table — pages mapped from the shared-prefix trie are skipped
+        (their KV is already resident and other holders may be reading
+        them); non-sequence leaves use the dense ``_insert_slot`` rule
+        (rank-1 -> axis 0, else axis 1).  The slot's freshly written pages
+        are then published to the trie.
         """
         pages = self.blocks_of(slot)
         need = num_blocks(n_tokens, self.page_size)
+        skip = int(self.shared_count[slot])
         if self.has_seq:
             assert len(pages) >= need, \
                 "write_slot without enough pages mapped"
-        idx = jnp.asarray(pages[:need], jnp.int32)
+        idx = jnp.asarray(pages[skip:need], jnp.int32)
         leaves, _ = jax.tree.flatten(cache1)
         new_store = []
         for pool, leaf, seq in zip(self.store, leaves, self.is_seq):
             if seq:
-                new_store.append(
-                    _write_pages(pool, leaf, idx, need, self.page_size))
+                if skip < need:
+                    pool = _write_pages(pool, leaf, idx, skip, need,
+                                        self.page_size)
+                new_store.append(pool)
             else:
                 if leaf.ndim == 1:
                     new_store.append(pool.at[slot].set(leaf[0]))
                 else:
                     new_store.append(pool.at[:, slot].set(leaf[:, 0]))
         self.store = new_store
+        self._commit_prefix(slot)
+
+    def _commit_prefix(self, slot: int) -> None:
+        """Publish the slot's prompt pages now that their KV is written."""
+        tokens = self._pending_prompt.pop(slot, None)
+        if tokens is None or self.prefix is None:
+            return
+        covered = num_blocks(len(tokens), self.page_size)
+        self.prefix.register(tokens, self.blocks_of(slot)[:covered],
+                             self.page_size)
 
     def defrag(self) -> Dict[int, int]:
         """Compact live pages to the lowest indices.
 
         Returns the old->new mapping applied.  Pool data is permuted on
-        device; block tables and the allocator free list are rebuilt so the
+        device; block tables, the prefix trie, and the allocator (via its
+        public ``rebuild``, refcounts preserved) are renumbered so the
         logical contents (``gather()``) are unchanged.
         """
-        live = sorted(self.alloc._used)
+        live = self.alloc.live_pages()
         mapping = {old: new for new, old in enumerate(live)}
         if all(o == n for o, n in mapping.items()):
             return mapping
@@ -324,8 +635,10 @@ class PagedCache:
         self.tables = np.where(self.tables < 0, -1,
                                lut[np.maximum(self.tables, 0)]
                                ).astype(np.int32)
-        self.alloc._used = set(range(len(live)))
-        self.alloc._free = list(range(self.num_pages - 1, len(live) - 1, -1))
+        self.alloc.rebuild({mapping[p]: self.alloc.refcount(p)
+                            for p in live})
+        if self.prefix is not None:
+            self.prefix.remap(mapping)
         self._invalidate()
         return mapping
 
@@ -346,36 +659,50 @@ def _permute_pool(pool: jax.Array, perm: jax.Array) -> jax.Array:
     return pool[:, perm]
 
 
-@functools.partial(jax.jit, static_argnums=(3,))
-def _write_pages_impl(pool, leaf, idx, page_size):
-    # leaf (L, 1, S, ...) with S >= need*ps; chop into (L, need, ps, ...)
+@jax.jit
+def _copy_page(pool: jax.Array, src, dst) -> jax.Array:
+    return pool.at[:, dst].set(pool[:, src])
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4))
+def _write_pages_impl(pool, leaf, idx, skip, page_size):
+    # leaf (L, 1, S, ...) with S >= (skip+n)*ps; chop the unshared span
+    # into (L, n, ps, ...) and scatter it at idx
     l = leaf.shape[0]
-    need = idx.shape[0]
-    chunk = leaf[:, 0, : need * page_size]
-    chunk = chunk.reshape((l, need, page_size) + leaf.shape[3:])
+    n = idx.shape[0]
+    chunk = leaf[:, 0, skip * page_size:(skip + n) * page_size]
+    chunk = chunk.reshape((l, n, page_size) + leaf.shape[3:])
     return pool.at[:, idx].set(chunk)
 
 
-def _write_pages(pool, leaf, idx, need, page_size):
+def _write_pages(pool, leaf, idx, skip, need, page_size):
     s = leaf.shape[SEQ_AXIS]
     if s < need * page_size:                 # pad ragged tail to page edge
         pad = [(0, 0)] * leaf.ndim
         pad[SEQ_AXIS] = (0, need * page_size - s)
         leaf = jnp.pad(leaf, pad)
-    return _write_pages_impl(pool, leaf, idx, page_size)
+    return _write_pages_impl(pool, leaf, idx, skip, page_size)
 
 
 @jax.jit
 def _scatter_token_jit(pool, leaf, tables, pos, active, page_size):
-    """Scatter leaf[:, b, pos[b]] into pool at the page holding pos[b]."""
+    """Scatter leaf[:, b, pos[b]] into pool at the page holding pos[b].
+
+    A write whose position falls outside the slot's mapped window (block
+    index past the table) is routed to the scratch page together with
+    inactive slots — clipping ``blk`` alone used to alias such writes onto
+    the window's *last live page*, corrupting resident KV.
+    """
     b = leaf.shape[BATCH_AXIS]
     blk = pos // page_size                   # (B,)
     off = pos % page_size
     nblk = tables.shape[1]
+    in_window = blk < nblk
     blk = jnp.clip(blk, 0, nblk - 1)
     page = jnp.take_along_axis(tables, blk[:, None], axis=1)[:, 0]
     trash = pool.shape[1] - 1                # scratch page index P
-    page = jnp.where(active, page, trash)
+    page = jnp.where(active & in_window, page, trash)
+    pos = jnp.clip(pos, 0, leaf.shape[SEQ_AXIS] - 1)
     val = jnp.take_along_axis(
         leaf, pos.reshape((1, b) + (1,) * (leaf.ndim - 2)),
         axis=SEQ_AXIS)                       # (L, B, 1, ...)

@@ -1,0 +1,437 @@
+"""Prefix-sharing tests: refcounted allocator invariants (deterministic +
+hypothesis property tests), the prompt-prefix trie, copy-on-write forks
+under interleaved decode, token-exact dense/paged/shared equivalence on
+shared-prefix traces, the out-of-window scatter regression, refcount-aware
+defrag (public ``rebuild`` API + engine fragmentation trigger), and the
+analytical sharing mirror in ``core.serving_sim``."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.hw import snake_system
+from repro.core.operators import PAPER_MODELS
+from repro.core.serving_sim import nmp_latency_model, simulate_serving
+from repro.models import registry
+from repro.serving.engine import (EngineConfig, RequestState, make_engine,
+                                  make_shared_prefix_trace, make_trace)
+from repro.serving.paged_cache import (PageAllocator, PagedCache,
+                                       PrefixIndex, num_blocks,
+                                       probe_seq_leaves)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAS_HYPOTHESIS, reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator refcounts: deterministic invariants
+# ---------------------------------------------------------------------------
+def test_refcount_shared_page_not_freed_until_last_ref():
+    a = PageAllocator(4)
+    [p] = a.alloc(1)
+    a.incref(p)
+    assert a.refcount(p) == 2 and a.shared_pages == 1
+    assert not a.decref(p)              # one holder remains: not freed
+    assert a.used_pages == 1 and a.free_pages == 3
+    assert a.decref(p)                  # last reference frees
+    assert a.used_pages == 0 and a.free_pages == 4
+    with pytest.raises(ValueError):
+        a.decref(p)                     # double free still rejected
+    with pytest.raises(ValueError):
+        a.incref(p)                     # incref needs a live page
+
+
+def test_free_is_decref():
+    """free() on a shared page drops one reference, never the page."""
+    a = PageAllocator(4)
+    pages = a.alloc(2)
+    for p in pages:
+        a.incref(p)
+    a.free(pages)
+    assert a.used_pages == 2            # second holder keeps them live
+    a.free(pages)
+    assert a.free_pages == 4
+
+
+def test_rebuild_restores_lifo_order_and_refcounts():
+    a = PageAllocator(8)
+    a.alloc(8)
+    a.rebuild({2: 1, 5: 3})
+    assert a.used_pages == 2 and a.free_pages == 6
+    assert a.refcount(5) == 3 and a.refcount(0) == 0
+    # free list is rebuilt descending: allocation hands out the lowest
+    # free indices first, same as a freshly constructed allocator
+    assert a.alloc(3) == [0, 1, 3]
+    with pytest.raises(ValueError):
+        a.rebuild({99: 1})
+    with pytest.raises(ValueError):
+        a.rebuild({0: 0})
+
+
+@needs_hypothesis
+@settings(max_examples=100, deadline=None) if HAS_HYPOTHESIS else (lambda f: f)
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 5)),
+                max_size=60)) if HAS_HYPOTHESIS else (lambda f: f)
+def test_allocator_refcount_invariants(ops):
+    """Any alloc/incref/decref interleaving conserves pages, never frees a
+    page while references remain, and returns pages exactly at refcount
+    zero."""
+    from collections import Counter
+    a = PageAllocator(12)
+    held = []                           # our reference multiset
+    for kind, arg in ops:
+        if kind == 0:
+            got = a.alloc(arg)
+            if got is not None:
+                held.extend(got)
+        elif kind == 1 and held:
+            p = held[arg % len(held)]
+            a.incref(p)
+            held.append(p)
+        elif kind == 2 and held:
+            p = held.pop(arg % len(held))
+            a.decref(p)
+        model = Counter(held)
+        assert a.used_pages == len(model)
+        assert a.free_pages + a.used_pages == 12
+        for p, rc in model.items():
+            assert a.refcount(p) == rc
+        # no held page is ever handed out again (i.e. on the free list)
+        grabbed = a.alloc(a.free_pages)
+        assert not (set(model) & set(grabbed))
+        a.free(grabbed)
+    for p in list(held):
+        a.decref(p)
+    assert a.free_pages == 12 and a.used_pages == 0
+
+
+# ---------------------------------------------------------------------------
+# PrefixIndex trie
+# ---------------------------------------------------------------------------
+def test_prefix_index_match_register_remove_remap():
+    trie = PrefixIndex()
+    toks = np.arange(20, dtype=np.int32)
+    trie.register(toks, [4, 7, 9], 8)
+    assert trie.match(toks, 8) == [4, 7, 9]     # full + exact partial tail
+    assert trie.match(toks[:16], 8) == [4, 7]   # whole pages only
+    assert trie.match(toks[:18], 8) == [4, 7]   # different tail: no hit
+    other = np.concatenate([toks[:8], np.full(8, 99, np.int32)])
+    assert trie.match(other, 8) == [4]          # diverges after page 0
+    trie.remap({4: 0, 7: 1, 9: 2})              # defrag renumbering
+    assert trie.match(toks, 8) == [0, 1, 2]
+    trie.remove(1)
+    assert trie.match(toks, 8) == [0]
+    assert len(trie) == 2
+
+
+def test_prefix_index_first_writer_wins():
+    trie = PrefixIndex()
+    toks = np.arange(16, dtype=np.int32)
+    trie.register(toks, [3, 5], 8)
+    trie.register(toks, [8, 9], 8)      # duplicate content stays private
+    assert trie.match(toks, 8) == [3, 5]
+
+
+# ---------------------------------------------------------------------------
+# PagedCache: sharing, CoW, scatter regression, refcount-aware defrag
+# ---------------------------------------------------------------------------
+def _filled_cache(entry, n_tokens, fill):
+    """Batch-1 cache whose sequence leaves are `fill` on the valid prefix."""
+    import jax.numpy as jnp
+    c = entry.cache_zeros(1, n_tokens, 1)
+    leaves, treedef = jax.tree.flatten(c)
+    seq = probe_seq_leaves(entry, 1)
+    out = []
+    for leaf, s in zip(leaves, seq):
+        if s:
+            out.append(jnp.full_like(leaf, fill))
+        elif leaf.ndim == 1:
+            out.append(jnp.full_like(leaf, n_tokens))  # lengths
+        else:
+            out.append(leaf)
+    return jax.tree.unflatten(treedef, out)
+
+
+def _seq_leaves(pc, tree):
+    return [leaf for leaf, s in zip(jax.tree.leaves(tree), pc.is_seq) if s]
+
+
+def test_paged_cache_prefix_sharing_maps_and_isolates():
+    entry = registry.get("yi-6b", reduced=True)
+    pc = PagedCache(entry, max_batch=3, max_seq=32, page_size=8,
+                    num_pages=12, share=True)
+    prompt = (np.arange(20, dtype=np.int32) * 3 + 1) % 97
+    assert pc.alloc_slot(0, 21, tokens=prompt)
+    pc.write_slot(0, _filled_cache(entry, 20, 3), 20)
+    assert pc.pages_in_use() == 3
+    # identical prompt: all three prompt pages map onto slot 0's
+    assert pc.alloc_slot(1, 21, tokens=prompt)
+    assert pc.pages_in_use() == 3
+    assert int(pc.shared_count[1]) == 3
+    pc.write_slot(1, _filled_cache(entry, 20, 5), 20)   # skipped: shared
+    for leaf in _seq_leaves(pc, pc.gather()):
+        np.testing.assert_array_equal(np.asarray(leaf[:, 1, :20]), 3)
+    rep = pc.sharing_report()
+    assert rep["dedup_ratio"] == 2.0 and rep["shared_pages"] == 3
+    # CoW: fork slot 1's tail page; a write there no longer aliases slot 0
+    assert pc.fork_page(1, 2)
+    assert pc.pages_in_use() == 4 and pc.alloc.shared_pages == 2
+    assert pc.cow_forks == 1
+    pc.scatter_token(pc.gather(), np.array([0, 20, 0]),
+                     np.array([False, True, False]))
+    for leaf in _seq_leaves(pc, pc.gather()):
+        np.testing.assert_array_equal(np.asarray(leaf[:, 0, :20]), 3)
+    pc.free_slot(0)
+    assert pc.pages_in_use() == 3       # decref'd, still held by slot 1
+    pc.free_slot(1)
+    assert pc.pages_in_use() == 0
+
+
+def test_cow_for_write_only_forks_shared_pages():
+    entry = registry.get("yi-6b", reduced=True)
+    pc = PagedCache(entry, max_batch=2, max_seq=32, page_size=8,
+                    num_pages=8, share=True)
+    prompt = np.arange(12, dtype=np.int32)
+    assert pc.alloc_slot(0, 13, tokens=prompt)
+    pc.write_slot(0, _filled_cache(entry, 12, 3), 12)
+    assert pc.alloc_slot(1, 13, tokens=prompt)
+    # exclusive page (slot 0 after slot 1 forks) and unmapped windows
+    # are no-ops; the shared tail page forks exactly once per holder-write
+    assert pc.cow_for_write(1, 12)
+    assert pc.cow_forks == 1
+    assert pc.cow_for_write(0, 12)      # now exclusive again: no fork
+    assert pc.cow_forks == 1
+    assert pc.cow_for_write(0, 10_000)  # out of window: scratch, no fork
+    assert pc.cow_forks == 1
+
+
+def test_scatter_out_of_window_goes_to_scratch():
+    """Regression: a write whose position exceeds the mapped window used to
+    be clipped onto the window's last *live* page, corrupting resident KV;
+    it must land in the scratch page."""
+    entry = registry.get("yi-6b", reduced=True)
+    pc = PagedCache(entry, max_batch=2, max_seq=16, page_size=8,
+                    num_pages=6)
+    assert pc.alloc_slot(0, 16)
+    pc.write_slot(0, _filled_cache(entry, 16, 3), 16)
+    before = [np.asarray(x) for x in _seq_leaves(pc, pc.gather())]
+    pc.scatter_token(pc.gather(), np.array([16, 0]),
+                     np.array([True, False]))
+    after = [np.asarray(x) for x in _seq_leaves(pc, pc.gather())]
+    for b, a in zip(before, after):
+        np.testing.assert_array_equal(b, a)
+
+
+def test_defrag_refcount_aware_with_sharing():
+    entry = registry.get("yi-6b", reduced=True)
+    pc = PagedCache(entry, max_batch=3, max_seq=32, page_size=8,
+                    num_pages=12, share=True)
+    filler = np.arange(100, 116, dtype=np.int32)
+    prompt = np.arange(20, dtype=np.int32)
+    assert pc.alloc_slot(0, 17, tokens=filler)          # pages 0..2
+    pc.write_slot(0, _filled_cache(entry, 16, 9), 16)
+    assert pc.alloc_slot(1, 21, tokens=prompt)          # pages 3..5
+    pc.write_slot(1, _filled_cache(entry, 20, 3), 20)
+    assert pc.alloc_slot(2, 21, tokens=prompt)          # shares 3..5
+    pc.write_slot(2, _filled_cache(entry, 20, 5), 20)
+    pc.free_slot(0)                     # hole below the shared pages
+    assert pc.fragmentation() > 0.4
+    before = jax.tree.map(np.asarray, pc.gather())
+    mapping = pc.defrag()
+    after = jax.tree.map(np.asarray, pc.gather())
+    for b, a in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+        np.testing.assert_array_equal(b, a)
+    assert sorted(mapping.values())[:pc.pages_in_use()] == [0, 1, 2]
+    assert pc.alloc.shared_pages == 3   # refcounts survive rebuild
+    assert pc.fragmentation() == 0.0
+    # the trie was renumbered with the pages: a third sharer still maps
+    assert pc.alloc_slot(0, 21, tokens=prompt)
+    assert int(pc.shared_count[0]) == 3
+    assert pc.pages_in_use() == 3
+    assert pc.alloc.refcount(int(pc.tables[0, 0])) == 3
+
+
+# ---------------------------------------------------------------------------
+# Engine: CoW under interleaved decode, token-exactness, defrag trigger
+# ---------------------------------------------------------------------------
+def test_engine_cow_fork_under_interleaved_decode():
+    """Two identical prompts share even the ragged tail page; the first
+    decode write forks it (CoW) and the decoded tokens still match the
+    dense engine exactly."""
+    entry = registry.get("yi-6b", reduced=True)
+    prompt = ((np.arange(12, dtype=np.int32) * 7 + 3)
+              % entry.config.vocab).astype(np.int32)
+
+    def reqs():
+        return [RequestState(0, prompt.copy()),
+                RequestState(1, prompt.copy())]
+
+    ecfg = EngineConfig(max_batch=2, max_seq=32, max_new_tokens=6,
+                        paged=True, page_size=8, prefix_sharing=True)
+    eng = make_engine(entry, ecfg)
+    r0, r1 = reqs()
+    assert eng.submit(r0)
+    pages_one = eng.paged.pages_in_use()
+    assert eng.submit(r1)
+    assert eng.paged.pages_in_use() == pages_one    # fully deduplicated
+    assert eng.paged.alloc.shared_pages == num_blocks(12, 8) == 2
+    eng.step()      # both slots write position 12: shared tail page forks
+    assert eng.paged.cow_forks == 1
+    assert eng.paged.alloc.shared_pages == 1        # full page still shared
+    while eng.active:
+        eng.step()
+    assert eng.paged.pages_in_use() == 0
+
+    dense = make_engine(entry, EngineConfig(max_batch=2, max_seq=32,
+                                            max_new_tokens=6))
+    d0, d1 = reqs()
+    assert dense.submit(d0) and dense.submit(d1)
+    while dense.active:
+        dense.step()
+    assert (r0.tokens_out, r1.tokens_out) == (d0.tokens_out, d1.tokens_out)
+
+
+@pytest.mark.slow
+def test_shared_prefix_trace_token_exact_and_resident_below_paged():
+    """Dense, paged, and paged+sharing engines emit identical tokens on a
+    shared-prefix trace, while sharing keeps resident pages strictly below
+    the unshared paged engine and reports dedup > 1."""
+    entry = registry.get("yi-6b", reduced=True)
+
+    def run(**over):
+        ecfg = EngineConfig(max_batch=3, max_seq=64, max_new_tokens=5,
+                            **over)
+        eng = make_engine(entry, ecfg)
+        reqs = make_shared_prefix_trace(
+            entry.config.vocab, rate_req_s=500.0, n_requests=6,
+            prefix_len=24, tail_len=5, seed=2)
+        m = eng.run_trace(reqs)
+        return eng, m
+
+    dense_eng, _ = run()
+    paged_eng, _ = run(paged=True, page_size=8)
+    shared_eng, shared_m = run(paged=True, page_size=8,
+                               prefix_sharing=True)
+
+    def toks(e):
+        return {r.rid: r.tokens_out for r in e.completed}
+
+    assert toks(dense_eng) == toks(paged_eng) == toks(shared_eng)
+    assert shared_eng.pages_peak < paged_eng.pages_peak
+    assert shared_m["kv_dedup_ratio_peak"] > 1.0
+    assert shared_m["kv_shared_pages"] == 0         # all released by now
+
+
+@pytest.mark.slow
+def test_shared_prefix_pallas_readthrough_matches():
+    """The block-table Pallas decode path is token-exact under sharing
+    (CoW forks happen before the kernel writes)."""
+    entry = registry.get("yi-6b", reduced=True)
+
+    def run(**over):
+        ecfg = EngineConfig(max_batch=3, max_seq=64, max_new_tokens=4,
+                            **over)
+        eng = make_engine(entry, ecfg)
+        reqs = make_shared_prefix_trace(
+            entry.config.vocab, rate_req_s=500.0, n_requests=4,
+            prefix_len=16, tail_len=0, seed=4)      # identical prompts
+        eng.run_trace(reqs)
+        return {r.rid: r.tokens_out for r in eng.completed}
+
+    assert run() == run(paged=True, page_size=8, prefix_sharing=True,
+                        use_pallas_decode=True)
+
+
+@pytest.mark.slow
+def test_shared_chunked_pallas_does_not_corrupt_shared_pages():
+    """Regression: while a slot is mid chunked-prefill it already has
+    shared prefix pages mapped but is not in the decode batch; the Pallas
+    kernel writes every lane's K/V unconditionally, so an unmasked lane
+    used to clobber position 0 of a live shared page (which write_slot
+    then skips, never repairing it).  Inactive lanes must write scratch."""
+    entry = registry.get("yi-6b", reduced=True)
+
+    def run(**over):
+        ecfg = EngineConfig(max_batch=2, max_seq=48, max_new_tokens=6,
+                            **over)
+        eng = make_engine(entry, ecfg)
+        reqs = make_shared_prefix_trace(
+            entry.config.vocab, rate_req_s=1000.0, n_requests=3,
+            prefix_len=16, tail_len=0, seed=6)     # identical prompts
+        eng.run_trace(reqs)
+        return {r.rid: r.tokens_out for r in eng.completed}
+
+    assert run() == run(paged=True, page_size=8, prefix_sharing=True,
+                        prefill_chunk=4, use_pallas_decode=True)
+
+
+def test_engine_defrag_trigger_runs():
+    entry = registry.get("yi-6b", reduced=True)
+    ecfg = EngineConfig(max_batch=2, max_seq=32, max_new_tokens=3,
+                        paged=True, page_size=8, defrag_threshold=0.3)
+    eng = make_engine(entry, ecfg)
+    m = eng.run_trace(make_trace(entry.config.vocab, rate_req_s=1000.0,
+                                 n_requests=6, prompt_len=12, seed=5))
+    assert m["requests"] == 6
+    assert m["defrag_runs"] >= 1
+    assert eng.paged.pages_in_use() == 0
+
+
+def test_max_seq_roundup_reconciled():
+    """A max_seq that isn't a page multiple is rounded up once and adopted
+    everywhere; kv_report asserts table capacity and engine agree."""
+    entry = registry.get("yi-6b", reduced=True)
+    ecfg = EngineConfig(max_batch=2, max_seq=50, max_new_tokens=3,
+                        paged=True, page_size=8)
+    eng = make_engine(entry, ecfg)
+    assert eng.ecfg.max_seq == 56 == eng.paged.max_seq
+    assert eng.paged.max_blocks * ecfg.page_size == eng.ecfg.max_seq
+    req = RequestState(0, np.arange(9, dtype=np.int32))
+    assert eng.submit(req)
+    eng.step()
+    assert eng.kv_report()["used_tokens"] == 9 + 2
+
+
+# ---------------------------------------------------------------------------
+# Analytical mirror (core.serving_sim)
+# ---------------------------------------------------------------------------
+def _sim(**kw):
+    spec = PAPER_MODELS["LLaMA3-70B"]
+    lat = nmp_latency_model(snake_system(), spec, tp=8)
+    return simulate_serving(lat, spec, 0.5, system="SNAKE",
+                            n_requests=16, **kw)
+
+
+def test_sim_sharing_reduces_resident_kv():
+    base = _sim(cache_mode="paged")
+    shared = _sim(cache_mode="paged", prefix_sharing=True,
+                  shared_prefix_len=1024)
+    assert shared.kv_peak_tokens < base.kv_peak_tokens
+    assert shared.dedup_ratio > 1.0
+    assert base.dedup_ratio == 1.0
+    # sharing is a residency policy, not a latency change
+    assert shared.e2e_mean_s == base.e2e_mean_s
+    assert shared.tbt_mean_s == base.tbt_mean_s
+
+
+def test_sim_sharing_edge_cases():
+    base = _sim(cache_mode="paged")
+    zero = _sim(cache_mode="paged", prefix_sharing=True,
+                shared_prefix_len=0)
+    assert zero.kv_peak_tokens == base.kv_peak_tokens
+    # a sub-page prefix deduplicates nothing (whole pages only)
+    subpage = _sim(cache_mode="paged", prefix_sharing=True,
+                   shared_prefix_len=7)
+    assert subpage.dedup_ratio == 1.0
+    with pytest.raises(ValueError):
+        _sim(cache_mode="dense", prefix_sharing=True,
+             shared_prefix_len=1024)
+    with pytest.raises(ValueError):
+        _sim(cache_mode="paged", prefix_sharing=True,
+             shared_prefix_len=10_000)
