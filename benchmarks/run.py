@@ -27,6 +27,7 @@ MODULES = [
     "tpu_roofline",        # deliverable (g): dry-run roofline table
     "serving_paged",       # paged vs dense engine on a skewed-length trace
     "serving_shared",      # refcounted prefix sharing on shared-prompt traces
+    "serving_router",      # multi-replica routing policies (prefix affinity)
 ]
 
 

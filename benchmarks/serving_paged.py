@@ -17,14 +17,16 @@ Run directly or via ``benchmarks.run``:
 """
 from __future__ import annotations
 
+import argparse
 import time
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
 from benchmarks.common import Row, emit
 from repro.models import registry
-from repro.serving.engine import EngineConfig, make_engine, make_trace
+from repro.serving.engine import (EngineConfig, load_trace, make_engine,
+                                  make_trace)
 
 ARCH = "yi-6b"
 N_REQ = 12
@@ -44,7 +46,7 @@ def skewed_prompt_lens(n: int, seed: int, lo: int = 4,
     return np.clip(lens.astype(np.int64), lo, hi)
 
 
-def run() -> List[Row]:
+def run(trace_file: Optional[str] = None) -> List[Row]:
     entry = registry.get(ARCH, reduced=True)
     lens = skewed_prompt_lens(N_REQ, SEED)
     rows: List[Row] = []
@@ -55,9 +57,12 @@ def run() -> List[Row]:
                             paged=(mode == "paged"), page_size=PAGE,
                             prefill_chunk=16)
         eng = make_engine(entry, ecfg)
-        reqs = make_trace(entry.config.vocab, rate_req_s=RATE,
-                          n_requests=N_REQ, prompt_len=0, seed=SEED,
-                          prompt_lens=lens)
+        if trace_file:
+            reqs = load_trace(trace_file, vocab=entry.config.vocab)
+        else:
+            reqs = make_trace(entry.config.vocab, rate_req_s=RATE,
+                              n_requests=N_REQ, prompt_len=0, seed=SEED,
+                              prompt_lens=lens)
         m = eng.run_trace(reqs)
         metrics[mode] = m
         rows.append(Row(f"serving_paged/{mode}/tokens_per_s",
@@ -76,5 +81,11 @@ def run() -> List[Row]:
 
 
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace-file", type=str, default=None,
+                    help="replay a recorded JSON trace instead of the "
+                         "synthetic skewed-length sweep")
+    args = ap.parse_args()
     t0 = time.time()
-    emit("serving_paged", run(), time.time() - t0)
+    emit("serving_paged", run(trace_file=args.trace_file),
+         time.time() - t0)

@@ -1,0 +1,200 @@
+"""Multi-replica router policies on skewed shared-prefix traces.
+
+The workload the front-end router exists for: several tenant groups, each
+with its own system prompt, Zipf-skewed popularity, near-simultaneous
+arrivals.  Every (replicas x policy) cell replays the IDENTICAL trace, so
+decoded tokens are comparable cell-to-cell (greedy decode is
+schedule-independent — asserted against the bare engine for the
+1-replica router).
+
+Per-replica page pools are deliberately tight: a policy that fragments a
+group's prefix pages across replicas (round_robin) duplicates the
+communal pages on every replica and pays for it in preemptions and tail
+latency, while ``prefix_affinity`` routes each group to the replica whose
+``PrefixIndex`` already holds its pages, so PR 2's dedup compounds.
+
+Two sections, both written to ``benchmarks/out/serving_router.json``:
+
+* real-JAX engine (reduced config, CPU-runnable): 1/2/4 replicas x
+  policies, plus the 1-replica-router vs. bare-engine token-exactness
+  cross-check;
+* analytical mirror (``core/serving_sim.py::simulate_cluster``): the
+  paper-scale workload (2K-in/512-out on the SNAKE substrate) under the
+  same policy set, reporting per-replica utilization, p50/p99, and
+  aggregate dedup.
+
+Run directly or via ``benchmarks.run``:
+
+  PYTHONPATH=src:. python benchmarks/serving_router.py [--smoke]
+      [--trace-file trace.json]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import List, Optional
+
+from benchmarks.common import Row, emit
+from repro.models import registry
+from repro.serving.engine import EngineConfig, load_trace, make_engine, \
+    make_grouped_prefix_trace
+from repro.serving.router import make_cluster
+
+ARCH = "yi-6b"
+N_REQ = 16
+RATE = 200.0          # near-simultaneous arrivals: maximum routing overlap
+MAX_BATCH = 4
+MAX_SEQ = 64
+MAX_NEW = 24
+PAGE = 8
+NUM_PAGES = 22        # per replica — colocated groups fit, fragmented
+                      # communal prefixes overflow into preemptions
+N_GROUPS = 4
+PREFIX = 24           # 3 full pages of shared system prompt per group
+TAIL = 6
+SKEW = 0.8
+SEED = 0
+REPLICAS = (1, 2, 4)
+POLICIES = ("round_robin", "least_loaded", "session_affinity",
+            "prefix_affinity")
+
+
+def _ecfg(max_new: int) -> EngineConfig:
+    return EngineConfig(max_batch=MAX_BATCH, max_seq=MAX_SEQ,
+                        max_new_tokens=max_new, paged=True,
+                        page_size=PAGE, num_pages=NUM_PAGES,
+                        prefix_sharing=True, prefill_chunk=8)
+
+
+def engine_rows(n_req: int, replicas, policies, max_new: int,
+                trace_file: Optional[str] = None) -> List[Row]:
+    entry = registry.get(ARCH, reduced=True)
+
+    def trace():
+        if trace_file:
+            return load_trace(trace_file, vocab=entry.config.vocab)
+        return make_grouped_prefix_trace(
+            entry.config.vocab, rate_req_s=RATE, n_requests=n_req,
+            n_groups=N_GROUPS, prefix_len=PREFIX, tail_len=TAIL,
+            skew=SKEW, seed=SEED)
+
+    rows: List[Row] = []
+    # -- 1-replica router vs. bare engine: token-exactness --------------
+    eng = make_engine(entry, _ecfg(max_new))
+    eng.run_trace(trace())
+    base_tokens = {r.rid: r.tokens_out for r in eng.completed}
+    router = make_cluster(entry, _ecfg(max_new), 1, policy="round_robin")
+    router.run_trace(trace())
+    got = {r.rid: r.tokens_out
+           for e in router.engines for r in e.completed}
+    assert got == base_tokens, \
+        "1-replica router diverged from the bare engine"
+    rows.append(Row("serving_router/router1_token_exact", 1.0,
+                    note="1-replica router tokens == bare engine"))
+
+    # -- replicas x policies sweep on the identical trace ----------------
+    metrics = {}
+    for n_rep in replicas:
+        for policy in policies:
+            router = make_cluster(entry, _ecfg(max_new), n_rep,
+                                  policy=policy)
+            m = router.run_trace(trace())
+            toks = {r.rid: r.tokens_out
+                    for e in router.engines for r in e.completed}
+            assert toks == base_tokens, \
+                f"{policy} x{n_rep} changed decoded tokens"
+            metrics[(n_rep, policy)] = m
+            p = f"serving_router/r{n_rep}/{policy}"
+            rows.append(Row(f"{p}/tokens_per_s", m["tokens_per_s"]))
+            rows.append(Row(f"{p}/e2e_p99_s", m["e2e_p99_s"]))
+            rows.append(Row(f"{p}/dedup_agg", m["dedup_ratio_agg"]))
+            rows.append(Row(f"{p}/preemptions", m["preemptions"]))
+    for n_rep in replicas:
+        if n_rep < 2 or (n_rep, "prefix_affinity") not in metrics:
+            continue
+        pa = metrics[(n_rep, "prefix_affinity")]
+        rr = metrics[(n_rep, "round_robin")]
+        p = f"serving_router/r{n_rep}"
+        rows.append(Row(f"{p}/dedup_pa_over_rr",
+                        pa["dedup_ratio_agg"] / max(1e-9,
+                                                    rr["dedup_ratio_agg"]),
+                        note="prefix_affinity dedup gain vs round_robin"))
+        rows.append(Row(f"{p}/p99_pa_over_rr",
+                        pa["e2e_p99_s"] / max(1e-9, rr["e2e_p99_s"]),
+                        note="<= 1: affinity no worse at the tail"))
+        assert pa["dedup_ratio_agg"] > rr["dedup_ratio_agg"], \
+            f"prefix_affinity did not raise aggregate dedup (x{n_rep})"
+    return rows
+
+
+SIM_SKEW = 0.3        # group-popularity skew for the analytical sweep —
+                      # mild skew keeps affinity's hot replica from
+                      # queueing while still fragmenting round robin
+
+
+def sim_rows(replicas, policies, n_requests: int = 48) -> List[Row]:
+    from repro.core.hw import snake_system
+    from repro.core.operators import PAPER_MODELS
+    from repro.core.serving_sim import nmp_latency_model, simulate_cluster
+    spec = PAPER_MODELS["LLaMA3-70B"]
+    lat = nmp_latency_model(snake_system(), spec, tp=8)
+    rows: List[Row] = []
+    reports = {}
+    for n_rep in replicas:
+        for policy in policies:
+            rep = simulate_cluster(
+                lat, spec, 20.0, policy=policy, n_replicas=n_rep,
+                n_requests=n_requests, input_len=2048, output_len=512,
+                max_batch=8, prefix_sharing=True, shared_prefix_len=1536,
+                n_groups=4, skew=SIM_SKEW, page_size=64, num_pages=120,
+                seed=SEED)
+            reports[(n_rep, policy)] = rep
+            p = f"serving_router/sim/r{n_rep}/{policy}"
+            rows.append(Row(f"{p}/throughput_tok_s",
+                            rep.throughput_tok_s))
+            rows.append(Row(f"{p}/e2e_p50_s", rep.e2e_p50_s))
+            rows.append(Row(f"{p}/e2e_p99_s", rep.e2e_p99_s))
+            rows.append(Row(f"{p}/dedup_ratio", rep.dedup_ratio))
+            rows.append(Row(f"{p}/preemptions", rep.preemptions))
+            rows.append(Row(f"{p}/util_min",
+                            min(rep.per_replica_util)))
+            rows.append(Row(f"{p}/util_max",
+                            max(rep.per_replica_util)))
+    for n_rep in replicas:
+        if n_rep < 2 or (n_rep, "prefix_affinity") not in reports:
+            continue
+        pa = reports[(n_rep, "prefix_affinity")]
+        rr = reports[(n_rep, "round_robin")]
+        p = f"serving_router/sim/r{n_rep}"
+        rows.append(Row(f"{p}/dedup_pa_over_rr",
+                        pa.dedup_ratio / rr.dedup_ratio))
+        rows.append(Row(f"{p}/p99_pa_over_rr",
+                        pa.e2e_p99_s / rr.e2e_p99_s,
+                        note="<= 1: affinity no worse at the tail"))
+        assert pa.dedup_ratio > rr.dedup_ratio
+        assert pa.e2e_p99_s <= rr.e2e_p99_s * 1.001
+    return rows
+
+
+def run(smoke: bool = False,
+        trace_file: Optional[str] = None) -> List[Row]:
+    if smoke:
+        rows = engine_rows(8, (1, 2), ("round_robin", "prefix_affinity"),
+                           6, trace_file)
+        rows.extend(sim_rows((1, 2), ("round_robin", "prefix_affinity"),
+                             n_requests=24))
+    else:
+        rows = engine_rows(N_REQ, REPLICAS, POLICIES, MAX_NEW, trace_file)
+        rows.extend(sim_rows(REPLICAS, POLICIES))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--trace-file", type=str, default=None)
+    args = ap.parse_args()
+    t0 = time.time()
+    emit("serving_router", run(smoke=args.smoke,
+                               trace_file=args.trace_file),
+         time.time() - t0)

@@ -22,13 +22,13 @@ Run directly or via ``benchmarks.run``:
 """
 from __future__ import annotations
 
-import sys
+import argparse
 import time
-from typing import List
+from typing import List, Optional
 
 from benchmarks.common import Row, emit
 from repro.models import registry
-from repro.serving.engine import EngineConfig, make_engine, \
+from repro.serving.engine import EngineConfig, load_trace, make_engine, \
     make_shared_prefix_trace
 
 ARCH = "yi-6b"
@@ -44,10 +44,17 @@ PREFIXES = (0, 16, 48)          # common system-prompt tokens (0/2/6 pages)
 SIM_PREFIXES = (0, 256, 1024)   # paper-scale analytical sweep
 
 
-def engine_rows(n_req: int, prefixes, max_new: int) -> List[Row]:
+def engine_rows(n_req: int, prefixes, max_new: int,
+                trace_file: Optional[str] = None) -> List[Row]:
     entry = registry.get(ARCH, reduced=True)
     rows: List[Row] = []
+    if trace_file:
+        # a recorded trace has its own (unknown) prefix structure: run
+        # the paged-vs-shared comparison once, labeled as a replay,
+        # instead of pretending to sweep prefix lengths
+        prefixes = ("replay",)
     for prefix_len in prefixes:
+        tag = "replay" if trace_file else f"p{prefix_len}"
         metrics, tokens = {}, {}
         for mode in ("paged", "shared"):
             ecfg = EngineConfig(max_batch=MAX_BATCH, max_seq=MAX_SEQ,
@@ -55,19 +62,22 @@ def engine_rows(n_req: int, prefixes, max_new: int) -> List[Row]:
                                 page_size=PAGE,
                                 prefix_sharing=(mode == "shared"))
             eng = make_engine(entry, ecfg)
-            reqs = make_shared_prefix_trace(
-                entry.config.vocab, rate_req_s=RATE, n_requests=n_req,
-                prefix_len=prefix_len, tail_len=TAIL, seed=SEED)
+            if trace_file:
+                reqs = load_trace(trace_file, vocab=entry.config.vocab)
+            else:
+                reqs = make_shared_prefix_trace(
+                    entry.config.vocab, rate_req_s=RATE, n_requests=n_req,
+                    prefix_len=prefix_len, tail_len=TAIL, seed=SEED)
             m = eng.run_trace(reqs)
             metrics[mode] = m
             tokens[mode] = {r.rid: r.tokens_out for r in eng.completed}
-            p = f"serving_shared/p{prefix_len}/{mode}"
+            p = f"serving_shared/{tag}/{mode}"
             rows.append(Row(f"{p}/tokens_per_s", m["tokens_per_s"]))
             rows.append(Row(f"{p}/kv_peak_tokens", m["kv_peak_tokens"]))
         assert tokens["paged"] == tokens["shared"], \
-            f"sharing changed decoded tokens (prefix={prefix_len})"
+            f"sharing changed decoded tokens ({tag})"
         sm = metrics["shared"]
-        p = f"serving_shared/p{prefix_len}"
+        p = f"serving_shared/{tag}"
         rows.append(Row(f"{p}/dedup_ratio", sm["kv_dedup_ratio_peak"],
                         note="peak logical/physical pages with sharing"))
         rows.append(Row(f"{p}/cow_forks", sm["cow_forks"]))
@@ -103,16 +113,24 @@ def sim_rows() -> List[Row]:
     return rows
 
 
-def run(smoke: bool = False) -> List[Row]:
+def run(smoke: bool = False,
+        trace_file: Optional[str] = None) -> List[Row]:
     if smoke:
-        rows = engine_rows(4, (0, 16), 4)
+        rows = engine_rows(4, (0, 16), 4, trace_file)
     else:
-        rows = engine_rows(N_REQ, PREFIXES, MAX_NEW)
+        rows = engine_rows(N_REQ, PREFIXES, MAX_NEW, trace_file)
     rows.extend(sim_rows())
     return rows
 
 
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--trace-file", type=str, default=None,
+                    help="replay a recorded JSON trace instead of the "
+                         "synthetic shared-prefix sweep")
+    args = ap.parse_args()
     t0 = time.time()
-    emit("serving_shared", run(smoke="--smoke" in sys.argv[1:]),
+    emit("serving_shared", run(smoke=args.smoke,
+                               trace_file=args.trace_file),
          time.time() - t0)

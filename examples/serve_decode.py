@@ -6,19 +6,53 @@ the attention path.
 ``--paged`` switches both engines to the block-table paged KV cache (the
 RWKV state has no sequence axis, so its paged cache degenerates to the
 slot-dense layout and the comparison shows zero pages); ``--prefill-chunk``
-co-schedules Sarathi prefill chunks with the hot decode batch; ``--share``
-turns on refcounted prefix sharing and drives a shared-system-prompt trace
-(16 common + 8 unique tokens per request) so the dedup ratio is visible.
+co-schedules Sarathi prefill chunks with the hot decode batch (written
+directly into pages on the paged engine); ``--share`` turns on refcounted
+prefix sharing and drives a shared-system-prompt trace (16 common + 8
+unique tokens per request) so the dedup ratio is visible.
+
+``--replicas N`` (with ``--share``) stands the dense-LM engine up N times
+behind the front-end router and dispatches a 2-group multi-tenant trace
+under ``--policy`` — ``prefix_affinity`` keeps each group's pages on one
+replica, so the aggregate dedup compounds instead of fragmenting.
 
   PYTHONPATH=src python examples/serve_decode.py
   PYTHONPATH=src python examples/serve_decode.py --pallas --paged
   PYTHONPATH=src python examples/serve_decode.py --paged --share
+  PYTHONPATH=src python examples/serve_decode.py --share --replicas 2 \
+      --policy prefix_affinity
 """
 import argparse
 
 from repro.models import registry
 from repro.serving.engine import (EngineConfig, make_engine,
+                                  make_grouped_prefix_trace,
                                   make_shared_prefix_trace)
+from repro.serving.router import POLICIES, make_cluster
+
+
+def run_cluster(args):
+    entry = registry.get("yi-6b", reduced=True)
+    ecfg = EngineConfig(max_batch=4, max_seq=64, max_new_tokens=12,
+                        use_pallas_decode=args.pallas, paged=True,
+                        page_size=16, prefix_sharing=True,
+                        prefill_chunk=args.prefill_chunk)
+    router = make_cluster(entry, ecfg, args.replicas, policy=args.policy)
+    reqs = make_grouped_prefix_trace(entry.config.vocab,
+                                     rate_req_s=args.rate,
+                                     n_requests=args.n_requests,
+                                     n_groups=2, prefix_len=16, tail_len=8,
+                                     skew=0.5)
+    m = router.run_trace(reqs)
+    print(f"[serve_decode] yi-6b x{args.replicas} ({args.policy})  "
+          f"{m['requests']} reqs  {m['decoded_tokens']} toks  "
+          f"{m['tokens_per_s']:.1f} tok/s  "
+          f"p99 e2e {m['e2e_p99_s'] * 1e3:.0f}ms  "
+          f"dedup x{m['dedup_ratio_agg']:.2f}")
+    for rep in m["per_replica"]:
+        print(f"[serve_decode]   replica {rep['replica']}: "
+              f"{rep['requests']} reqs  {rep['decoded_tokens']} toks  "
+              f"dedup x{rep['dedup_ratio_peak']:.2f}")
 
 
 def main():
@@ -31,7 +65,17 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=None)
     ap.add_argument("--n-requests", type=int, default=10)
     ap.add_argument("--rate", type=float, default=6.0)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="with --share: replicas behind the router")
+    ap.add_argument("--policy", choices=POLICIES, default="prefix_affinity")
     args = ap.parse_args()
+    if args.replicas > 1 and not args.share:
+        ap.error("--replicas needs --share (the router demo drives a "
+                 "grouped shared-prefix trace)")
+
+    if args.share and args.replicas > 1:
+        run_cluster(args)
+        return
 
     for arch in ("yi-6b", "rwkv6-7b"):
         entry = registry.get(arch, reduced=True)

@@ -33,6 +33,10 @@ class Request:
     token_times: List[float] = field(default_factory=list)
     pages_held: int = 0
     prefill_remaining: int = 0
+    # cluster routing keys (simulate_cluster): which shared-prefix group
+    # the prompt belongs to, and the session affinity id
+    group: int = 0
+    session: int = 0
 
     def ctx(self) -> int:
         return self.input_len + self.tokens_out
@@ -321,3 +325,306 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
                          max_decode_stall_s=max_stall,
                          preemptions=preemptions,
                          dedup_ratio=dedup_peak)
+
+
+# ---------------------------------------------------------------------------
+# Multi-replica cluster (the serving/router.py analytical mirror)
+# ---------------------------------------------------------------------------
+CLUSTER_POLICIES = ("round_robin", "least_loaded", "session_affinity",
+                    "prefix_affinity")
+
+
+@dataclass
+class ClusterReport:
+    policy: str
+    replicas: int
+    rate_req_s: float
+    completed: int
+    throughput_tok_s: float
+    e2e_p50_s: float
+    e2e_p99_s: float
+    tbt_mean_s: float
+    per_replica_util: List[float]
+    per_replica_completed: List[int]
+    dedup_ratio: float          # aggregate peak logical/physical pages
+    preemptions: int
+
+
+def make_cluster_trace(rate_req_s: float, n_requests: int, input_len: int,
+                       output_len: int, *, n_groups: int = 4,
+                       skew: float = 1.0, seed: int = 0) -> List[Request]:
+    """Poisson arrivals tagged with a Zipf(``skew``)-popular prefix group
+    (``session`` = group: a multi-turn tenant reusing its system prompt).
+    The real-engine counterpart is
+    ``serving.scheduler.make_grouped_prefix_trace``."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_req_s, size=n_requests)
+    arrivals = np.cumsum(gaps)
+    weights = 1.0 / np.arange(1, n_groups + 1) ** skew
+    weights /= weights.sum()
+    groups = rng.choice(n_groups, size=n_requests, p=weights)
+    return [Request(i, float(arrivals[i]), input_len, output_len,
+                    group=int(groups[i]), session=int(groups[i]))
+            for i in range(n_requests)]
+
+
+class _Replica:
+    """One decode engine in the analytical cluster: its own clock, xPU
+    prefill stream, page pool, and per-group prefix refcounts (the
+    per-replica ``PrefixIndex``, analytically)."""
+
+    def __init__(self, latency: DecodeLatencyModel, spec: ModelSpec,
+                 max_batch: int, pages_cap: int, page_size: int,
+                 shared_full: int):
+        self.latency = latency
+        self.spec = spec
+        self.max_batch = max_batch
+        self.pages_cap = pages_cap
+        self.page_size = page_size
+        self.shared_full = shared_full
+        self.clock = 0.0
+        self.busy_s = 0.0
+        self.pf_stream = 0.0
+        self.queue: List[Request] = []
+        self.active: List[Request] = []
+        self.done: List[Request] = []
+        self.free_pages = pages_cap
+        self.prefix_refs: Dict[int, int] = {}
+        self.preemptions = 0
+        self.logical_peak = 0
+        self.physical_peak = 0
+
+    # -- load signals read by the dispatch policy ----------------------
+    def load(self) -> Tuple[int, int]:
+        return (len(self.active) + len(self.queue), -self.free_pages)
+
+    def holds_group(self, g: int) -> bool:
+        return self.prefix_refs.get(g, 0) > 0
+
+    # -- paged admission with per-group prefix dedup -------------------
+    def _admit(self, r: Request) -> bool:
+        need = _pages(r.input_len + 1, self.page_size) - self.shared_full
+        extra = (self.shared_full
+                 if self.shared_full and not self.holds_group(r.group)
+                 else 0)
+        if self.free_pages < need + extra:
+            return False
+        self.free_pages -= need + extra
+        r.pages_held = need
+        if self.shared_full:
+            self.prefix_refs[r.group] = \
+                self.prefix_refs.get(r.group, 0) + 1
+        return True
+
+    def _release(self, r: Request) -> None:
+        self.free_pages += r.pages_held
+        r.pages_held = 0
+        if self.shared_full:
+            self.prefix_refs[r.group] -= 1
+            if self.prefix_refs[r.group] == 0:
+                self.free_pages += self.shared_full
+                del self.prefix_refs[r.group]
+
+    def _preempt_youngest(self, exclude: Request) -> bool:
+        cands = [r for r in self.active if r is not exclude]
+        if not cands:
+            return False
+        victim = max(cands, key=lambda r: (r.arrival_s, r.rid))
+        self.active.remove(victim)
+        self._release(victim)
+        victim.tokens_out = 0
+        victim.token_times = []
+        victim.prefill_done_s = self.clock + _prefill_time(
+            self.spec, victim.input_len)
+        self.queue.append(victim)
+        self.queue.sort(key=lambda q: (q.prefill_done_s, q.rid))
+        self.preemptions += 1
+        return True
+
+    def enqueue(self, r: Request) -> None:
+        """Dispatch: the replica's serialized xPU stream prefills it."""
+        self.pf_stream = (max(self.pf_stream, r.arrival_s)
+                          + _prefill_time(self.spec, r.input_len))
+        r.prefill_done_s = self.pf_stream
+        self.queue.append(r)
+        # a preempted victim re-queued at clock+t_pf may sit ahead of a
+        # later arrival that is ready sooner; head-only admission needs
+        # the queue sorted by readiness or an idle replica can livelock
+        self.queue.sort(key=lambda q: (q.prefill_done_s, q.rid))
+
+    def _note_peaks(self) -> None:
+        physical = self.pages_cap - self.free_pages
+        logical = (sum(r.pages_held for r in self.active)
+                   + sum(self.prefix_refs.values()) * self.shared_full)
+        self.physical_peak = max(self.physical_peak, physical)
+        self.logical_peak = max(self.logical_peak, logical)
+
+    def _step_once(self) -> bool:
+        """Admit what's ready, run one decode iteration.  False when
+        there is nothing to do at the current clock."""
+        while self.queue and self.queue[0].prefill_done_s <= self.clock \
+                and len(self.active) < self.max_batch \
+                and self._admit(self.queue[0]):
+            self.active.append(self.queue.pop(0))
+        if not self.active:
+            return False
+        it = self.latency(len(self.active),
+                          int(np.mean([r.ctx() for r in self.active])))
+        self.clock += it
+        self.busy_s += it
+        self._note_peaks()
+        for r in list(self.active):
+            if r not in self.active:    # preempted mid-iteration
+                continue
+            need = (_pages(r.ctx() + 1, self.page_size)
+                    - r.pages_held - self.shared_full)
+            while need > self.free_pages:
+                if not self._preempt_youngest(exclude=r):
+                    raise RuntimeError(
+                        "replica page pool too small for one request")
+            self.free_pages -= need
+            r.pages_held += need
+            r.tokens_out += 1
+            r.token_times.append(self.clock)
+            if r.tokens_out >= r.output_len:
+                r.finish_s = self.clock
+                self._release(r)
+                self.active.remove(r)
+                self.done.append(r)
+        self._note_peaks()
+        return True
+
+    def advance_to(self, t: float) -> None:
+        """Run the replica's loop up to wall-time ``t`` (dispatch-time
+        synchronization point: load signals are current as of ``t``)."""
+        while self.clock < t:
+            if self._step_once():
+                continue
+            nxt = min((r.prefill_done_s for r in self.queue), default=t)
+            if nxt >= t:
+                self.clock = t
+                return
+            self.clock = max(self.clock, nxt)
+
+    def run_to_completion(self) -> None:
+        while self.active or self.queue:
+            if not self._step_once():
+                self.clock = max(self.clock,
+                                 min(r.prefill_done_s
+                                     for r in self.queue))
+
+
+def simulate_cluster(latency: DecodeLatencyModel, spec: ModelSpec,
+                     rate_req_s: float, *, policy: str = "round_robin",
+                     n_replicas: int = 2, n_requests: int = 64,
+                     input_len: int = 8192, output_len: int = 1024,
+                     max_batch: int = 64, seed: int = 0,
+                     page_size: int = 16, num_pages: Optional[int] = None,
+                     prefix_sharing: bool = False,
+                     shared_prefix_len: int = 0, n_groups: int = 4,
+                     skew: float = 1.0,
+                     trace: Optional[List[Request]] = None
+                     ) -> ClusterReport:
+    """Analytical mirror of ``serving/router.py``: N independent paged
+    decode replicas behind one dispatch policy.
+
+    Requests are dispatched in arrival order; before each dispatch every
+    replica is advanced to the arrival instant so the policy reads load
+    signals as the real front end would.  Replicas then mirror
+    ``simulate_serving``'s paged machinery per replica: serialized xPU
+    prefill stream, continuous-batching decode via the shared latency
+    model, on-demand page growth with youngest-first preemption, and —
+    with ``prefix_sharing`` — per-group communal prefix pages refcounted
+    per replica, so colocating a group's requests (prefix/session
+    affinity) raises the aggregate dedup ratio exactly as the engine's
+    trie does.
+
+    ``dedup_ratio`` aggregates peak logical pages over peak physical
+    pages across replicas; ``per_replica_util`` is busy decode time over
+    the cluster makespan.
+    """
+    if policy not in CLUSTER_POLICIES:
+        raise ValueError(f"unknown policy {policy!r}; "
+                         f"choose from {CLUSTER_POLICIES}")
+    if trace is None:
+        trace = make_cluster_trace(rate_req_s, n_requests, input_len,
+                                   output_len, n_groups=n_groups,
+                                   skew=skew, seed=seed)
+    n_requests = len(trace)
+    # size the guard off the actual trace — an explicit ``trace`` may
+    # carry longer contexts than the input_len/output_len defaults, and
+    # an unsatisfiable admission would spin forever instead of raising
+    worst = max(_pages(r.input_len + r.output_len, page_size)
+                for r in trace)
+    pages_cap = (num_pages if num_pages is not None
+                 else max_batch * worst)
+    if pages_cap < worst:
+        raise ValueError("num_pages cannot hold even one full context")
+    shared_full = (shared_prefix_len // page_size
+                   if prefix_sharing else 0)
+    # validate against the actual trace, not the input_len default —
+    # a shorter explicit prompt would drive page accounting negative
+    if shared_prefix_len > min(r.input_len for r in trace):
+        raise ValueError("shared_prefix_len exceeds a trace prompt")
+    reps = [_Replica(latency, spec, max_batch, pages_cap, page_size,
+                     shared_full) for _ in range(n_replicas)]
+
+    rr = 0
+    sessions: Dict[int, int] = {}
+    hints: Dict[int, int] = {}
+
+    def least_loaded(among=None) -> int:
+        idxs = among if among is not None else range(n_replicas)
+        return min(idxs, key=lambda i: reps[i].load() + (i,))
+
+    def select(r: Request) -> int:
+        nonlocal rr
+        if policy == "round_robin":
+            i = rr % n_replicas
+            rr += 1
+            return i
+        if policy == "least_loaded":
+            return least_loaded()
+        if policy == "session_affinity":
+            if r.session not in sessions:
+                sessions[r.session] = least_loaded()
+            return sessions[r.session]
+        holders = [i for i in range(n_replicas)
+                   if reps[i].holds_group(r.group)]
+        if holders:
+            return (holders[0] if len(holders) == 1
+                    else least_loaded(holders))
+        if r.group in hints:
+            return hints[r.group]
+        return least_loaded()
+
+    for req in sorted(trace, key=lambda r: (r.arrival_s, r.rid)):
+        for rep in reps:
+            rep.advance_to(req.arrival_s)
+        i = select(req)
+        hints[req.group] = i
+        reps[i].enqueue(req)
+    for rep in reps:
+        rep.run_to_completion()
+
+    all_done = [r for rep in reps for r in rep.done]
+    assert len(all_done) == n_requests
+    wall = max(max((r.finish_s for r in all_done)),
+               max(r.arrival_s for r in all_done))
+    e2e = np.array([r.finish_s - r.arrival_s for r in all_done])
+    tbts = [float(np.diff(np.concatenate(
+                [[r.prefill_done_s], np.asarray(r.token_times)])).mean())
+            for r in all_done]
+    logical = sum(rep.logical_peak for rep in reps)
+    physical = sum(rep.physical_peak for rep in reps)
+    return ClusterReport(
+        policy=policy, replicas=n_replicas, rate_req_s=rate_req_s,
+        completed=len(all_done),
+        throughput_tok_s=sum(r.tokens_out for r in all_done) / wall,
+        e2e_p50_s=float(np.percentile(e2e, 50)),
+        e2e_p99_s=float(np.percentile(e2e, 99)),
+        tbt_mean_s=float(np.mean(tbts)),
+        per_replica_util=[rep.busy_s / wall for rep in reps],
+        per_replica_completed=[len(rep.done) for rep in reps],
+        dedup_ratio=(logical / physical if physical else 1.0),
+        preemptions=sum(rep.preemptions for rep in reps))

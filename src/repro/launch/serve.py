@@ -8,18 +8,52 @@
 block-table read-through paged kernel.  ``--paged`` switches KV residency
 to the page-pool layout (``--page-size``, ``--num-pages`` to oversubscribe)
 and ``--prefill-chunk`` interleaves Sarathi prefill chunks with the hot
-decode batch.  ``--prefix-sharing`` adds refcounted prompt-prefix pages
-with copy-on-write; combine it with ``--shared-prefix N`` to drive a
+decode batch (written directly into block-table pages on the paged
+engine).  ``--prefix-sharing`` adds refcounted prompt-prefix pages with
+copy-on-write; combine it with ``--shared-prefix N`` to drive a
 shared-system-prompt trace (every prompt = N common tokens + a unique
 tail) and watch the dedup ratio in the report.
+
+Multi-replica serving (PR 3): ``--replicas N`` stands up N engine
+replicas behind the front-end router and ``--router-policy`` picks the
+dispatch policy (``round_robin`` / ``least_loaded`` /
+``session_affinity`` / ``prefix_affinity`` — the latter routes requests
+to the replica whose prefix trie already holds their leading prompt
+pages).  ``--groups G`` drives a skewed multi-tenant trace (G distinct
+system prompts, Zipf popularity).  ``--eos-rate`` samples per-request
+early-stop decode lengths; ``--trace-file`` replays a recorded JSON
+trace instead of synthesizing one.
 """
 from __future__ import annotations
 
 import argparse
 
 from repro.models import registry
-from repro.serving.engine import (EngineConfig, make_engine,
-                                  make_shared_prefix_trace)
+from repro.serving.engine import (EngineConfig, load_trace, make_engine,
+                                  make_grouped_prefix_trace,
+                                  make_shared_prefix_trace, make_trace)
+from repro.serving.router import POLICIES, make_cluster
+
+
+def build_trace(args, vocab: int):
+    if args.trace_file:
+        return load_trace(args.trace_file, vocab=vocab)
+    if args.shared_prefix > 0:
+        # total prompt length stays --prompt-len: N shared + unique tail
+        prefix = min(args.shared_prefix, args.prompt_len - 1)
+        if args.groups > 1:
+            return make_grouped_prefix_trace(
+                vocab, rate_req_s=args.rate, n_requests=args.n_requests,
+                n_groups=args.groups, prefix_len=prefix,
+                tail_len=args.prompt_len - prefix, skew=args.group_skew,
+                eos_rate=args.eos_rate)
+        return make_shared_prefix_trace(
+            vocab, rate_req_s=args.rate, n_requests=args.n_requests,
+            prefix_len=prefix, tail_len=args.prompt_len - prefix,
+            eos_rate=args.eos_rate)
+    return make_trace(vocab, rate_req_s=args.rate,
+                      n_requests=args.n_requests,
+                      prompt_len=args.prompt_len, eos_rate=args.eos_rate)
 
 
 def main():
@@ -49,10 +83,28 @@ def main():
     ap.add_argument("--defrag-threshold", type=float, default=0.5,
                     help="fragmentation fraction that triggers pool "
                          "defrag (negative disables)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas behind the front-end router")
+    ap.add_argument("--router-policy", choices=POLICIES,
+                    default="round_robin")
+    ap.add_argument("--groups", type=int, default=1,
+                    help="distinct system-prompt groups (with "
+                         "--shared-prefix): the prefix-affinity workload")
+    ap.add_argument("--group-skew", type=float, default=1.0,
+                    help="Zipf popularity skew across groups")
+    ap.add_argument("--eos-rate", type=float, default=None,
+                    help="per-step early-stop probability (samples "
+                         "per-request decode budgets)")
+    ap.add_argument("--trace-file", type=str, default=None,
+                    help="replay a recorded JSON trace "
+                         "(serving.scheduler.load_trace format)")
     args = ap.parse_args()
     if args.prefix_sharing and not args.paged:
         ap.error("--prefix-sharing requires --paged (the dense engine "
                  "has no page tables to share)")
+    if args.router_policy == "prefix_affinity" and not args.prefix_sharing:
+        ap.error("--router-policy prefix_affinity requires "
+                 "--prefix-sharing (nothing resident to probe otherwise)")
 
     entry = registry.get(args.arch, reduced=not args.full)
     ecfg = EngineConfig(max_batch=args.max_batch,
@@ -66,21 +118,20 @@ def main():
                         prefix_sharing=args.prefix_sharing,
                         defrag_threshold=(None if args.defrag_threshold < 0
                                           else args.defrag_threshold))
-    eng = make_engine(entry, ecfg)
-    if args.shared_prefix > 0:
-        # total prompt length stays --prompt-len: N shared + unique tail
-        prefix = min(args.shared_prefix, args.prompt_len - 1)
-        reqs = make_shared_prefix_trace(entry.config.vocab,
-                                        rate_req_s=args.rate,
-                                        n_requests=args.n_requests,
-                                        prefix_len=prefix,
-                                        tail_len=args.prompt_len - prefix)
-        metrics = eng.run_trace(reqs)
+    reqs = build_trace(args, entry.config.vocab)
+    if args.replicas > 1:
+        router = make_cluster(entry, ecfg, args.replicas,
+                              policy=args.router_policy)
+        metrics = router.run_trace(reqs)
+        per = metrics.pop("per_replica")
+        print(f"[serve] {args.arch} x{args.replicas} "
+              f"({args.router_policy}): {metrics}")
+        for rep in per:
+            print(f"[serve]   replica {rep['replica']}: {rep}")
     else:
-        metrics = eng.run_workload(rate_req_s=args.rate,
-                                   n_requests=args.n_requests,
-                                   prompt_len=args.prompt_len)
-    print(f"[serve] {args.arch}: {metrics}")
+        eng = make_engine(entry, ecfg)
+        metrics = eng.run_trace(reqs)
+        print(f"[serve] {args.arch}: {metrics}")
 
 
 if __name__ == "__main__":

@@ -20,10 +20,19 @@ Two KV/state residency modes:
   materializing a contiguous cache.
 
 Admission is arrival-driven and prefill can be **chunk-interleaved**
-(Sarathi, the paper's ref [1]): with ``prefill_chunk`` set, ``run_trace``
+(Sarathi, the paper's ref [1]): with ``prefill_chunk`` set, the driver
 advances at most one prompt chunk via ``transformer.extend_step`` between
 decode iterations, so a long prompt never stalls the hot decode batch for
-more than one chunk of work.
+more than one chunk of work.  On the paged engine those chunks are
+written **directly into block-table pages** (gather the slot window,
+extend, scatter the chunk) — no dense per-request staging buffer, no
+admission-time copy.
+
+The trace-driving loop itself lives in ``serving/scheduler.py`` (PR 3):
+an engine is one *replica* exposing ``admit`` / ``tick`` /
+``load_report``, and ``serving/router.py`` dispatches traffic across N
+replicas.  ``run_trace`` / ``run_workload`` here are thin wrappers that
+drive a single-replica :class:`~repro.serving.scheduler.Scheduler`.
 
 Works for every registry family (KVCache / RWKVState / RGState /
 EncDecCache) via a generic batch-axis rule: rank-1 state leaves batch on
@@ -38,7 +47,7 @@ shardings from ``launch.steps.assemble_shardings``.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 import jax
@@ -47,6 +56,17 @@ import numpy as np
 
 from repro.models import registry
 from repro.serving.paged_cache import PagedCache, num_blocks
+# re-exported for back-compat: these lived here before the scheduling
+# loop was extracted into serving/scheduler.py
+from repro.serving.scheduler import (RequestState, Scheduler, load_trace,
+                                     make_grouped_prefix_trace,
+                                     make_shared_prefix_trace, make_trace,
+                                     save_trace)
+
+__all__ = ["EngineConfig", "RequestState", "ServingEngine",
+           "PagedServingEngine", "make_engine", "make_trace",
+           "make_shared_prefix_trace", "make_grouped_prefix_trace",
+           "load_trace", "save_trace", "Scheduler"]
 
 # transformer-module families: chunkable prefill (extend_step) and the
 # flash-decode attention paths all key off this one set
@@ -68,32 +88,6 @@ class EngineConfig:
     # run PagedCache.defrag() when the fraction of holes below the
     # high-water page index exceeds this (None disables the trigger)
     defrag_threshold: Optional[float] = 0.5
-
-
-@dataclass
-class RequestState:
-    rid: int
-    prompt: np.ndarray
-    arrival_s: float = 0.0
-    slot: int = -1
-    prefill_done_s: float = 0.0
-    tokens_out: List[int] = field(default_factory=list)
-    token_times: List[float] = field(default_factory=list)
-    finish_s: float = 0.0
-    first_token_s: float = 0.0
-    preemptions: int = 0
-
-    @property
-    def done(self) -> bool:
-        return self.finish_s > 0.0
-
-    def reset_generation(self) -> None:
-        """Drop generated state for re-queueing after a preemption."""
-        self.slot = -1
-        self.tokens_out = []
-        self.token_times = []
-        self.prefill_done_s = 0.0
-        self.first_token_s = 0.0
 
 
 def _insert_slot(cache, new, slot: int):
@@ -121,7 +115,7 @@ class ServingEngine:
         self.active: Dict[int, RequestState] = {}
         self.completed: List[RequestState] = []
         self.preemption_count = 0
-        self._requeue: List[RequestState] = []
+        self.requeue: List[RequestState] = []   # preempted, awaiting re-admit
         self._prefilling: Optional[dict] = None   # chunk-scheduler state
         self._init_cache()
 
@@ -199,6 +193,30 @@ class ServingEngine:
         return {"mode": "dense", "reserved_tokens": cap,
                 "peak_tokens": cap, "used_tokens": used}
 
+    def _budget(self, req: RequestState) -> int:
+        """Decode budget: the engine ceiling, tightened by the request's
+        trace-sampled early stop (eos-aware traces)."""
+        if req.decode_len is not None:
+            return min(self.ecfg.max_new_tokens, max(1, req.decode_len))
+        return self.ecfg.max_new_tokens
+
+    def _activate(self, slot: int, req: RequestState) -> None:
+        """Prefill done, first token emitted: either the request is
+        already finished (budget of one, or the first token IS eos) or it
+        joins the decode batch."""
+        hit_eos = (self.ecfg.eos_id >= 0
+                   and req.tokens_out[-1] == self.ecfg.eos_id)
+        budget = self._budget(req)
+        if hit_eos or len(req.tokens_out) >= budget:
+            req.finish_s = time.perf_counter()
+            req.finish_reason = (
+                "eos" if (hit_eos or budget < self.ecfg.max_new_tokens)
+                else "budget")
+            self.completed.append(req)
+            self._release(slot)
+            return
+        self.active[slot] = req
+
     # ------------------------------------------------------------------
     def submit(self, req: RequestState) -> bool:
         """Prefill the request into a free slot; False if engine is full."""
@@ -216,7 +234,7 @@ class ServingEngine:
         req.prefill_done_s = time.perf_counter() - t0
         req.first_token_s = time.perf_counter()
         req.tokens_out.append(first)
-        self.active[slot] = req
+        self._activate(slot, req)
         return True
 
     def step(self) -> int:
@@ -236,8 +254,15 @@ class ServingEngine:
             req.tokens_out.append(tok)
             req.token_times.append(now)
             hit_eos = self.ecfg.eos_id >= 0 and tok == self.ecfg.eos_id
-            if hit_eos or len(req.tokens_out) >= self.ecfg.max_new_tokens:
+            # per-request decode budget: a trace-sampled early stop below
+            # the engine ceiling models an eos emission (eos-aware traces)
+            budget = self._budget(req)
+            if hit_eos or len(req.tokens_out) >= budget:
                 req.finish_s = now
+                req.finish_reason = (
+                    "eos" if (hit_eos
+                              or budget < self.ecfg.max_new_tokens)
+                    else "budget")
                 self.completed.append(req)
                 del self.active[slot]
                 self._release(slot)
@@ -289,121 +314,66 @@ class ServingEngine:
         req.prefill_done_s = time.perf_counter() - st["t0"]
         req.first_token_s = time.perf_counter()
         req.tokens_out.append(first)
-        self.active[slot] = req
+        self._activate(slot, req)
         self._prefilling = None
         return True
 
-    # ------------------------------------------------------------------
+    # -- narrow replica interface (driven by Scheduler / Router) -------
+    def admit(self, req: RequestState) -> bool:
+        """Claim a slot for ``req`` — chunked prefill start when chunking
+        is configured, full prefill otherwise.  False when saturated."""
+        return (self._start_chunked(req) if self._chunkable()
+                else self.submit(req))
+
+    def tick(self) -> int:
+        """Advance one iteration: at most one prefill chunk co-scheduled
+        with one decode step.  Returns #finished requests."""
+        if self._chunkable():
+            self._prefill_chunk_tick()
+        return self.step()
+
+    def busy(self) -> bool:
+        return bool(self.active) or self._prefilling is not None
+
+    def load_report(self) -> dict:
+        """Load snapshot for front-end routing decisions: resident work
+        (``queue_depth``) and headroom (``free_slots`` / ``free_pages``)."""
+        prefilling = int(self._prefilling is not None)
+        return {"active": len(self.active),
+                "prefilling": prefilling,
+                "queue_depth": (len(self.active) + prefilling
+                                + len(self.requeue)),
+                "free_slots": len(self.free_slots),
+                # dense engines have no page pool; slots are the capacity
+                "free_pages": len(self.free_slots)}
+
+    def prefix_residency(self, prompt: np.ndarray) -> int:
+        """Prompt pages already resident on this replica (0: none — the
+        dense engine shares nothing)."""
+        return 0
+
+    # -- single-replica driver wrappers --------------------------------
     def run_trace(self, reqs: List[RequestState]) -> dict:
-        """Drive an explicit request trace: arrival-driven admission,
-        wall-clock continuous batching, one prefill chunk co-scheduled
-        with each decode iteration when chunking is configured."""
-        n_requests = len(reqs)
-        t0 = time.perf_counter()
-        pending = sorted(reqs, key=lambda r: (r.arrival_s, r.rid))
-        interleave = self._chunkable()
-
-        def admit(req) -> bool:
-            return (self._start_chunked(req) if interleave
-                    else self.submit(req))
-
-        while len(self.completed) < n_requests:
-            now = time.perf_counter() - t0
-            while self._requeue:        # preempted requests re-enter first
-                if not admit(self._requeue[0]):
-                    break
-                self._requeue.pop(0)
-            while pending and pending[0].arrival_s <= now \
-                    and not self._requeue:
-                if not admit(pending[0]):
-                    break
-                pending.pop(0)
-            if interleave:
-                self._prefill_chunk_tick()
-            if not self.active:
-                if self._prefilling is None:
-                    if pending:
-                        time.sleep(max(0.0, min(0.01,
-                                                pending[0].arrival_s - now)))
-                continue
-            self.step()
-        wall = time.perf_counter() - t0
-        return self._metrics(wall, t0)
-
-    def _metrics(self, wall: float, t0: float) -> dict:
-        tbts, ttfts = [], []
-        for r in self.completed:
-            if len(r.token_times) > 1:
-                tbts.extend(np.diff(r.token_times))
-            if r.first_token_s > 0.0:
-                ttfts.append(r.first_token_s - t0 - r.arrival_s)
-        toks = sum(len(r.tokens_out) for r in self.completed)
-        kv = self.kv_report()
-        return {"wall_s": wall, "requests": len(self.completed),
-                "decoded_tokens": toks,
-                "tokens_per_s": toks / wall,
-                "tbt_mean_s": float(np.mean(tbts)) if tbts else 0.0,
-                "tbt_p99_s": float(np.percentile(tbts, 99)) if tbts else 0.0,
-                "ttft_mean_s": float(np.mean(ttfts)) if ttfts else 0.0,
-                "tpot_mean_s": float(np.mean(tbts)) if tbts else 0.0,
-                "preemptions": self.preemption_count,
-                "kv_mode": kv["mode"],
-                "kv_reserved_tokens": kv["reserved_tokens"],
-                "kv_peak_tokens": kv["peak_tokens"],
-                "kv_logical_peak_pages": kv.get("logical_peak_pages", 0),
-                "kv_shared_pages": kv.get("shared_pages", 0),
-                "kv_dedup_ratio_peak": kv.get("dedup_ratio_peak", 1.0),
-                "cow_forks": kv.get("cow_forks", 0),
-                "defrag_runs": kv.get("defrag_runs", 0)}
+        """Drive an explicit request trace through a single-replica
+        :class:`~repro.serving.scheduler.Scheduler` (the loop extracted
+        from this class in PR 3)."""
+        return Scheduler(self).run_trace(reqs)
 
     def run_workload(self, *, rate_req_s: float, n_requests: int,
                      prompt_len: int, seed: int = 0,
-                     prompt_lens: Optional[np.ndarray] = None) -> dict:
+                     prompt_lens: Optional[np.ndarray] = None,
+                     **trace_kwargs) -> dict:
         """Poisson arrivals, wall-clock continuous batching; returns metrics.
 
         ``prompt_lens`` overrides the constant ``prompt_len`` per request
-        (skewed-length traces)."""
+        (skewed-length traces); remaining ``trace_kwargs`` (``eos_rate``,
+        ``sessions``) are threaded through to :func:`make_trace` instead
+        of being silently dropped."""
         reqs = make_trace(self.cfg.vocab, rate_req_s=rate_req_s,
                           n_requests=n_requests, prompt_len=prompt_len,
-                          seed=seed, prompt_lens=prompt_lens)
+                          seed=seed, prompt_lens=prompt_lens,
+                          **trace_kwargs)
         return self.run_trace(reqs)
-
-
-def make_trace(vocab: int, *, rate_req_s: float, n_requests: int,
-               prompt_len: int, seed: int = 0,
-               prompt_lens: Optional[np.ndarray] = None
-               ) -> List[RequestState]:
-    """Deterministic Poisson trace; identical across engines for a seed."""
-    rng = np.random.default_rng(seed)
-    gaps = rng.exponential(1.0 / rate_req_s, size=n_requests)
-    arrivals = np.cumsum(gaps)
-    if prompt_lens is None:
-        prompt_lens = np.full(n_requests, prompt_len, np.int64)
-    prompts = [rng.integers(0, vocab, size=int(prompt_lens[i])
-                            ).astype(np.int32) for i in range(n_requests)]
-    return [RequestState(i, prompts[i], arrival_s=float(arrivals[i]))
-            for i in range(n_requests)]
-
-
-def make_shared_prefix_trace(vocab: int, *, rate_req_s: float,
-                             n_requests: int, prefix_len: int,
-                             tail_len: int, seed: int = 0
-                             ) -> List[RequestState]:
-    """Poisson trace where every prompt is one common prefix plus a unique
-    tail — the shared-system-prompt workload prefix sharing exists for.
-    ``prefix_len=0`` degenerates to fully unique prompts.  Deterministic
-    per seed, so the same trace can be replayed through dense, paged, and
-    sharing engines for token-exact comparison."""
-    rng = np.random.default_rng(seed)
-    gaps = rng.exponential(1.0 / rate_req_s, size=n_requests)
-    arrivals = np.cumsum(gaps)
-    prefix = rng.integers(0, vocab, size=prefix_len).astype(np.int32)
-    reqs = []
-    for i in range(n_requests):
-        tail = rng.integers(0, vocab, size=tail_len).astype(np.int32)
-        reqs.append(RequestState(i, np.concatenate([prefix, tail]),
-                                 arrival_s=float(arrivals[i])))
-    return reqs
 
 
 # ---------------------------------------------------------------------------
@@ -482,6 +452,63 @@ class PagedServingEngine(ServingEngine):
             self.dedup_ratio_peak = max(self.dedup_ratio_peak,
                                         logical / physical)
 
+    def load_report(self) -> dict:
+        rep = super().load_report()
+        if self.paged.has_seq:
+            rep["free_pages"] = self.paged.alloc.free_pages
+        return rep
+
+    def prefix_residency(self, prompt: np.ndarray) -> int:
+        return self.paged.prefix_residency(prompt)
+
+    # -- chunked prefill straight into block-table pages ---------------
+    def _start_chunked(self, req: RequestState) -> bool:
+        if not self.paged.has_seq:
+            # recurrent families: state is slot-dense, keep the buffer path
+            return super()._start_chunked(req)
+        if self._prefilling is not None:
+            return False
+        slot = self._claim(req)     # reserves prompt pages, maps shared ones
+        if slot is None:
+            return False
+        self._prefilling = {"req": req, "slot": slot, "pos": 0,
+                            "t0": time.perf_counter(), "logits": None,
+                            "direct": True}
+        return True
+
+    def _prefill_chunk_tick(self) -> bool:
+        """Advance the in-flight prefill by ONE chunk, writing it directly
+        into the slot's pages (gather window -> extend_step -> scatter
+        chunk) — no dense staging buffer, no admission-time copy."""
+        st = self._prefilling
+        if st is None or not st.get("direct"):
+            return super()._prefill_chunk_tick()
+        req, chunk, slot = st["req"], self.ecfg.prefill_chunk, st["slot"]
+        n = len(req.prompt)
+        take = min(chunk, n - st["pos"])
+        toks = jnp.asarray(req.prompt[None, st["pos"]: st["pos"] + take])
+        view = self.paged.gather_slot(slot, st["pos"])
+        logits, view = self._extend(self.params, toks, view)
+        logits.block_until_ready()
+        self.paged.scatter_chunk(slot, view, st["pos"], take)
+        st["pos"] += take
+        st["logits"] = logits
+        if st["pos"] < n:
+            return False
+        # prompt fully consumed: publish prefix pages, activate the slot
+        self.paged.commit_prefix(slot)
+        self._lengths_host[slot] = n
+        self._note_pages()
+        first = int(jnp.argmax(st["logits"][0, : self.cfg.vocab]))
+        self._next_tok[slot] = first
+        req.slot = slot
+        req.prefill_done_s = time.perf_counter() - st["t0"]
+        req.first_token_s = time.perf_counter()
+        req.tokens_out.append(first)
+        self._activate(slot, req)
+        self._prefilling = None
+        return True
+
     def kv_report(self) -> dict:
         # _init_cache reconciled the engine's max_seq with the paged
         # cache's page-rounded window; occupancy math is wrong if the two
@@ -551,7 +578,7 @@ class PagedServingEngine(ServingEngine):
         req.reset_generation()
         req.preemptions += 1
         self.preemption_count += 1
-        self._requeue.append(req)
+        self.requeue.append(req)
 
     def _decode_batch(self, toks: jax.Array) -> jax.Array:
         ecfg = self.ecfg

@@ -409,6 +409,16 @@ class PagedCache:
                 "dedup_ratio": logical / physical if physical else 1.0,
                 "cow_forks": self.cow_forks}
 
+    def prefix_residency(self, tokens: Optional[np.ndarray]) -> int:
+        """Leading prompt pages of ``tokens`` already resident in the
+        prefix trie — the front-end router's prefix-affinity probe.
+        Counts only what admission would actually map (full pages plus an
+        exact-match ragged tail); 0 when sharing is off."""
+        if (not self.share or not self.has_seq or tokens is None
+                or not len(tokens)):
+            return 0
+        return len(self.prefix.match(np.asarray(tokens), self.page_size))
+
     def alloc_slot(self, slot: int, n_tokens: int,
                    tokens: Optional[np.ndarray] = None) -> bool:
         """Allocate pages to cover ``n_tokens`` for an empty slot.
@@ -599,9 +609,69 @@ class PagedCache:
                 else:
                     new_store.append(pool.at[:, slot].set(leaf[:, 0]))
         self.store = new_store
-        self._commit_prefix(slot)
+        self.commit_prefix(slot)
 
-    def _commit_prefix(self, slot: int) -> None:
+    # -- direct chunked prefill (no dense staging buffer) ------------------
+    def gather_slot(self, slot: int, pos: int) -> Any:
+        """Assemble a batch-1 dense cache view of one slot's block-table
+        window for an ``extend_step`` chunk at offset ``pos``.
+
+        Sequence leaves gather the slot's full page window (unmapped
+        entries read the scratch page — the causal mask blanks everything
+        past ``pos`` + chunk anyway); non-sequence leaves slice the slot
+        column, except the rank-1 lengths leaf which is pinned to ``pos``
+        (the slot-dense copy is stale until the first chunk commits).
+        """
+        row = np.where(self.tables[slot] < 0, self.num_pages,
+                       self.tables[slot])
+        t_dev = jnp.asarray(row[None, :], jnp.int32)
+        out = []
+        for leaf, seq in zip(self.store, self.is_seq):
+            if seq:
+                out.append(_gather_pool(leaf, t_dev))
+            elif leaf.ndim == 1:
+                out.append(jnp.full((1,), pos, leaf.dtype))
+            else:
+                out.append(leaf[:, slot: slot + 1])
+        return jax.tree.unflatten(self.treedef, out)
+
+    def scatter_chunk(self, slot: int, cache1: Any, pos: int,
+                      take: int) -> None:
+        """Write one prefill chunk (``take`` tokens at offset ``pos``)
+        from the batch-1 view returned by ``extend_step`` straight into
+        the slot's block-table pages.
+
+        This is what lets the paged engine's chunk scheduler skip the
+        dense per-request staging buffer (and the admission-time
+        ``write_slot`` copy) entirely.  Positions inside shared-prefix
+        pages are routed to the scratch page: their KV is already
+        resident and other holders may be reading it — re-writing would
+        perturb it with this request's (numerically different) recompute.
+        Non-sequence leaves (lengths, recurrent state) are written to the
+        slot column wholesale each chunk.
+        """
+        ps = self.page_size
+        idx = np.arange(pos, pos + take)
+        blk = idx // ps
+        row = self.tables[slot]
+        assert (row[blk] >= 0).all(), "scatter_chunk into unmapped pages"
+        pages = np.where(blk < int(self.shared_count[slot]),
+                         self.num_pages, row[blk])
+        pages_dev = jnp.asarray(pages, jnp.int32)
+        offs_dev = jnp.asarray(idx % ps, jnp.int32)
+        leaves, _ = jax.tree.flatten(cache1)
+        new_store = []
+        for pool, leaf, seq in zip(self.store, leaves, self.is_seq):
+            if seq:
+                new_store.append(_scatter_chunk_jit(pool, leaf, pages_dev,
+                                                    offs_dev, pos))
+            elif leaf.ndim == 1:
+                new_store.append(pool.at[slot].set(leaf[0]))
+            else:
+                new_store.append(pool.at[:, slot].set(leaf[:, 0]))
+        self.store = new_store
+
+    def commit_prefix(self, slot: int) -> None:
         """Publish the slot's prompt pages now that their KV is written."""
         tokens = self._pending_prompt.pop(slot, None)
         if tokens is None or self.prefix is None:
@@ -682,6 +752,16 @@ def _write_pages(pool, leaf, idx, skip, need, page_size):
         pad[SEQ_AXIS] = (0, need * page_size - s)
         leaf = jnp.pad(leaf, pad)
     return _write_pages_impl(pool, leaf, idx, skip, page_size)
+
+
+@jax.jit
+def _scatter_chunk_jit(pool, leaf, pages, offs, start):
+    """Scatter ``take`` consecutive tokens (``leaf[:, 0, start:start+take]``)
+    into ``(pages[j], offs[j])`` pool positions.  ``pages`` already routes
+    shared-prefix positions to the scratch page."""
+    take = pages.shape[0]
+    vals = jax.lax.dynamic_slice_in_dim(leaf[:, 0], start, take, axis=1)
+    return pool.at[:, pages, offs].set(vals)
 
 
 @jax.jit

@@ -1,0 +1,214 @@
+"""Multi-replica front-end router (PR 3).
+
+The paper's scheduling framework distributes decode work across many
+compute stacks; this module is the serving-layer counterpart: a front
+end that owns N engine replicas (each one a
+:class:`~repro.serving.scheduler.Scheduler` around a ``ServingEngine``)
+and dispatches an arrival trace across them under a pluggable policy:
+
+* ``round_robin`` — cycle replicas in rid order;
+* ``least_loaded`` — fewest resident+queued requests, ties broken by
+  most free pages (both straight from ``load_report``);
+* ``session_affinity`` — a session's first request is placed
+  least-loaded, every later request of the same session sticks to that
+  replica (KV locality for multi-turn traffic);
+* ``prefix_affinity`` — probe each replica's ``PrefixIndex`` for the
+  request's leading prompt pages (``prefix_residency``) and route to the
+  replica already holding the most of them, so PR 2's refcounted dedup
+  *compounds* on one replica instead of fragmenting a prefix group's
+  pages across all of them.  Before the first holder's pages commit, a
+  host-side hint map (first-page token bytes -> replica) keeps a burst
+  of same-prefix arrivals together; with no signal at all it falls back
+  to least-loaded.
+
+Dispatch is a pure host-side decision; replicas then run their own
+continuous-batching loops, so a preempted request always re-enters the
+replica that holds its history.  The same policies are mirrored
+analytically in ``core/serving_sim.py::simulate_cluster``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import replace
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.scheduler import RequestState, Scheduler
+
+POLICIES = ("round_robin", "least_loaded", "session_affinity",
+            "prefix_affinity")
+
+
+class Router:
+    """Front end owning N engine replicas and a dispatch policy.
+
+    ``engines`` need only the narrow replica interface (``admit`` /
+    ``tick`` / ``load_report`` / ``requeue`` / ``completed`` /
+    ``busy()``, plus ``prefix_residency`` for prefix affinity) — unit
+    tests drive the policies with stub replicas.
+    """
+
+    def __init__(self, engines: Sequence, policy: str = "round_robin"):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; "
+                             f"choose from {POLICIES}")
+        if not engines:
+            raise ValueError("router needs at least one replica")
+        self.engines = list(engines)
+        self.schedulers = [Scheduler(e) for e in self.engines]
+        self.policy = policy
+        self._rr = 0
+        self._sessions: Dict[int, int] = {}
+        self._prefix_hint: Dict[bytes, int] = {}
+        # (rid, replica) in dispatch order — deterministic policy audit
+        self.dispatch_log: List[Tuple[int, int]] = []
+
+    # -- policy --------------------------------------------------------
+    def _load_score(self, i: int) -> Tuple[int, int, int]:
+        rep = self.engines[i].load_report()
+        backlog = rep["queue_depth"] + len(self.schedulers[i].pending)
+        return (backlog, -rep["free_pages"], i)
+
+    def _least_loaded(self, among: Optional[Sequence[int]] = None) -> int:
+        return min(among if among is not None
+                   else range(len(self.engines)), key=self._load_score)
+
+    def _prefix_key(self, prompt: np.ndarray) -> bytes:
+        """Hint-map key: the first full page of prompt tokens (whole
+        prompt when shorter than a page — the exact-tail-sharing case)."""
+        page = getattr(getattr(self.engines[0], "ecfg", None),
+                       "page_size", 16)
+        head = np.ascontiguousarray(prompt[:page], dtype=np.int64)
+        return head.tobytes()
+
+    def select(self, req: RequestState) -> int:
+        n = len(self.engines)
+        if self.policy == "round_robin":
+            i = self._rr % n
+            self._rr += 1
+            return i
+        if self.policy == "least_loaded":
+            return self._least_loaded()
+        if self.policy == "session_affinity":
+            sid = req.session if req.session is not None else req.rid
+            if sid not in self._sessions:
+                self._sessions[sid] = self._least_loaded()
+            return self._sessions[sid]
+        # prefix_affinity
+        res = [eng.prefix_residency(req.prompt) for eng in self.engines]
+        best = max(res)
+        if best > 0:
+            ties = [i for i, v in enumerate(res) if v == best]
+            return ties[0] if len(ties) == 1 else self._least_loaded(ties)
+        hint = self._prefix_hint.get(self._prefix_key(req.prompt))
+        return hint if hint is not None else self._least_loaded()
+
+    def dispatch(self, req: RequestState) -> int:
+        i = self.select(req)
+        if self.policy == "prefix_affinity":   # only reader of the hints
+            self._prefix_hint[self._prefix_key(req.prompt)] = i
+        self.dispatch_log.append((req.rid, i))
+        self.schedulers[i].enqueue(req)
+        return i
+
+    # -- cluster trace loop --------------------------------------------
+    def run_trace(self, reqs: List[RequestState]) -> dict:
+        """Dispatch the trace at arrival time and drive every replica's
+        scheduling loop to completion; returns aggregate metrics."""
+        n_requests = len(reqs)
+        pending = sorted(reqs, key=lambda r: (r.arrival_s, r.rid))
+        t0 = time.perf_counter()
+        while sum(len(e.completed) for e in self.engines) < n_requests:
+            now = time.perf_counter() - t0
+            while pending and pending[0].arrival_s <= now:
+                self.dispatch(pending.pop(0))
+            for sch in self.schedulers:
+                sch.tick(now)
+            if pending and all(sch.idle() for sch in self.schedulers):
+                time.sleep(max(0.0, min(0.01,
+                                        pending[0].arrival_s - now)))
+        wall = time.perf_counter() - t0
+        return self.metrics(wall, t0)
+
+    def metrics(self, wall: float, t0: float) -> dict:
+        """Aggregate cluster report + per-replica breakdown.
+
+        ``dedup_ratio_agg`` is the cluster-wide peak logical/physical
+        page ratio (sum of per-replica peaks) — the number prefix
+        affinity is supposed to push above round-robin's.
+        """
+        per_replica = []
+        all_done: List[RequestState] = []
+        logical_peak = physical_peak = 0
+        for i, (eng, sch) in enumerate(zip(self.engines,
+                                           self.schedulers)):
+            m = sch.metrics(wall, t0)
+            kv = eng.kv_report()
+            page = getattr(getattr(eng, "ecfg", None), "page_size", 1)
+            phys = kv["peak_tokens"] // max(1, page) \
+                if kv["mode"] == "paged" else 0
+            logi = kv.get("logical_peak_pages", 0)
+            logical_peak += logi
+            physical_peak += phys
+            per_replica.append({
+                "replica": i, "requests": m["requests"],
+                "decoded_tokens": m["decoded_tokens"],
+                "preemptions": m["preemptions"],
+                "kv_peak_tokens": m["kv_peak_tokens"],
+                "dedup_ratio_peak": m["kv_dedup_ratio_peak"],
+                "tokens_per_s": m["decoded_tokens"] / max(1e-9, wall)})
+            all_done.extend(eng.completed)
+        e2e = np.array([r.finish_s - t0 - r.arrival_s for r in all_done]
+                       ) if all_done else np.zeros(0)
+        tbts = []
+        for r in all_done:
+            if len(r.token_times) > 1:
+                tbts.extend(np.diff(r.token_times))
+        toks = sum(len(r.tokens_out) for r in all_done)
+        return {
+            "policy": self.policy,
+            "replicas": len(self.engines),
+            "wall_s": wall,
+            "requests": len(all_done),
+            "decoded_tokens": toks,
+            "tokens_per_s": toks / wall,
+            "e2e_p50_s": float(np.percentile(e2e, 50)) if len(e2e) else 0.0,
+            "e2e_p99_s": float(np.percentile(e2e, 99)) if len(e2e) else 0.0,
+            "tbt_mean_s": float(np.mean(tbts)) if tbts else 0.0,
+            "tbt_p99_s": float(np.percentile(tbts, 99)) if tbts else 0.0,
+            "preemptions": sum(e.preemption_count for e in self.engines),
+            "finish_eos": sum(1 for r in all_done
+                              if r.finish_reason == "eos"),
+            "finish_budget": sum(1 for r in all_done
+                                 if r.finish_reason == "budget"),
+            "dedup_ratio_agg": (logical_peak / physical_peak
+                                if physical_peak else 1.0),
+            "per_replica": per_replica,
+        }
+
+
+def make_cluster(entry, ecfg, n_replicas: int, tp: int = 1,
+                 policy: str = "round_robin",
+                 share_compiled: bool = True) -> Router:
+    """Build N identical engine replicas behind a :class:`Router`.
+
+    Each replica gets its OWN ``EngineConfig`` copy (the paged engine
+    adopts the page-rounded ``max_seq`` in place) and its own page pool /
+    slots.  All replicas are initialized from the same PRNG seed, so
+    their parameters are identical and — with ``share_compiled`` — the
+    first replica's parameter pytree and jitted prefill/decode/extend
+    callables are shared by the rest instead of re-initializing and
+    recompiling per replica.
+    """
+    from repro.serving.engine import make_engine
+    engines = [make_engine(entry, replace(ecfg), tp=tp)
+               for _ in range(n_replicas)]
+    if share_compiled:
+        first = engines[0]
+        for eng in engines[1:]:
+            eng.params = first.params
+            eng._prefill = first._prefill
+            eng._decode = first._decode
+            eng._extend = first._extend
+    return Router(engines, policy=policy)

@@ -1,0 +1,352 @@
+"""Multi-replica router tests (PR 3): dispatch-policy determinism on stub
+replicas, token-exactness of the 1-replica router vs. the bare engine,
+prefix-affinity dedup compounding, the analytical cluster mirror, the
+direct-to-pages chunked prefill, and eos-aware trace replay."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.hw import snake_system
+from repro.core.operators import PAPER_MODELS
+from repro.core.serving_sim import (make_cluster_trace, nmp_latency_model,
+                                    simulate_cluster)
+from repro.models import registry
+from repro.serving.engine import EngineConfig, make_engine
+from repro.serving.router import Router, make_cluster
+from repro.serving.scheduler import (RequestState, load_trace,
+                                     make_grouped_prefix_trace, make_trace,
+                                     save_trace)
+
+
+# ---------------------------------------------------------------------------
+# Policy unit tests on stub replicas
+# ---------------------------------------------------------------------------
+class _StubReplica:
+    """Implements only the narrow replica interface the router reads."""
+
+    def __init__(self, free_pages=10, queue_depth=0, residency=None):
+        class _E:
+            page_size = 8
+        self.ecfg = _E()
+        self.requeue = []
+        self.completed = []
+        self.preemption_count = 0
+        self.free_pages = free_pages
+        self.queue_depth = queue_depth
+        self.residency = residency or (lambda prompt: 0)
+
+    def load_report(self):
+        return {"active": self.queue_depth, "prefilling": 0,
+                "queue_depth": self.queue_depth, "free_slots": 4,
+                "free_pages": self.free_pages}
+
+    def prefix_residency(self, prompt):
+        return self.residency(prompt)
+
+    def busy(self):
+        return False
+
+
+def _req(rid, prompt=None, session=None):
+    if prompt is None:
+        prompt = np.arange(rid, rid + 8, dtype=np.int32)
+    return RequestState(rid, np.asarray(prompt, np.int32),
+                        session=session)
+
+
+def test_round_robin_cycles():
+    router = Router([_StubReplica() for _ in range(3)],
+                    policy="round_robin")
+    picks = [router.dispatch(_req(i)) for i in range(5)]
+    assert picks == [0, 1, 2, 0, 1]
+
+
+def test_least_loaded_prefers_shallow_queue_then_free_pages():
+    reps = [_StubReplica(queue_depth=2), _StubReplica(queue_depth=0),
+            _StubReplica(queue_depth=1)]
+    router = Router(reps, policy="least_loaded")
+    assert router.select(_req(0)) == 1
+    # queue depths equal -> most free pages wins
+    reps2 = [_StubReplica(free_pages=3), _StubReplica(free_pages=9),
+             _StubReplica(free_pages=6)]
+    assert Router(reps2, policy="least_loaded").select(_req(0)) == 1
+    # full tie -> lowest index (deterministic)
+    reps3 = [_StubReplica(), _StubReplica()]
+    assert Router(reps3, policy="least_loaded").select(_req(0)) == 0
+
+
+def test_least_loaded_counts_undelivered_backlog():
+    """Requests sitting in a replica's scheduler queue count as load even
+    before the engine has admitted them."""
+    router = Router([_StubReplica(), _StubReplica()],
+                    policy="least_loaded")
+    assert router.dispatch(_req(0)) == 0
+    assert router.dispatch(_req(1)) == 1     # 0 now has backlog 1
+    assert router.dispatch(_req(2)) == 0     # tie again -> lowest index
+
+
+def test_session_affinity_sticks():
+    router = Router([_StubReplica(), _StubReplica()],
+                    policy="session_affinity")
+    first = router.dispatch(_req(0, session=7))
+    assert router.dispatch(_req(1, session=8)) != first  # balanced start
+    assert router.dispatch(_req(2, session=7)) == first
+    assert router.dispatch(_req(3, session=7)) == first
+    # session defaults to rid when unset -> fresh placement per request
+    r4 = router.dispatch(_req(4))
+    assert r4 in (0, 1)
+
+
+def test_prefix_affinity_follows_residency_then_hint():
+    prompt_a = np.arange(16, dtype=np.int32)
+    prompt_b = np.arange(100, 116, dtype=np.int32)
+    key_a = prompt_a[:8].astype(np.int64).tobytes()
+    reps = [_StubReplica(),
+            _StubReplica(residency=lambda p, k=key_a:
+                         2 if p[:8].astype(np.int64).tobytes() == k
+                         else 0)]
+    router = Router(reps, policy="prefix_affinity")
+    # replica 1 already holds prompt_a's leading pages
+    assert router.dispatch(_req(0, prompt_a)) == 1
+    # no residency anywhere for b -> least-loaded fallback; then the hint
+    # keeps the burst together even before any pages commit
+    first_b = router.dispatch(_req(1, prompt_b))
+    assert router.dispatch(_req(2, prompt_b)) == first_b
+    assert router.dispatch(_req(3, prompt_a)) == 1
+
+
+def test_router_rejects_unknown_policy_and_empty_cluster():
+    with pytest.raises(ValueError):
+        Router([_StubReplica()], policy="fastest_first")
+    with pytest.raises(ValueError):
+        Router([], policy="round_robin")
+
+
+# ---------------------------------------------------------------------------
+# eos-aware traces + recorded replay
+# ---------------------------------------------------------------------------
+def test_make_trace_eos_rate_samples_decode_budgets():
+    t1 = make_trace(64, rate_req_s=10.0, n_requests=16, prompt_len=8,
+                    seed=3, eos_rate=0.5)
+    t2 = make_trace(64, rate_req_s=10.0, n_requests=16, prompt_len=8,
+                    seed=3, eos_rate=0.5)
+    assert all(r.decode_len >= 1 for r in t1)
+    assert [r.decode_len for r in t1] == [r.decode_len for r in t2]
+    assert len({r.decode_len for r in t1}) > 1    # actually sampled
+    plain = make_trace(64, rate_req_s=10.0, n_requests=4, prompt_len=8)
+    assert all(r.decode_len is None for r in plain)
+    with pytest.raises(ValueError):
+        make_trace(64, rate_req_s=10.0, n_requests=4, prompt_len=8,
+                   eos_rate=1.5)
+
+
+def test_trace_save_load_roundtrip(tmp_path):
+    reqs = make_grouped_prefix_trace(64, rate_req_s=10.0, n_requests=6,
+                                     n_groups=2, prefix_len=8, tail_len=4,
+                                     seed=1, eos_rate=0.3)
+    path = str(tmp_path / "trace.json")
+    save_trace(reqs, path)
+    back = load_trace(path)
+    assert len(back) == len(reqs)
+    for a, b in zip(reqs, back):
+        assert a.rid == b.rid
+        assert a.arrival_s == b.arrival_s
+        assert a.decode_len == b.decode_len
+        assert a.session == b.session
+        np.testing.assert_array_equal(a.prompt, b.prompt)
+
+
+def test_load_trace_prompt_len_needs_vocab(tmp_path):
+    path = str(tmp_path / "trace.json")
+    with open(path, "w") as f:
+        json.dump([{"arrival_s": 0.0, "prompt_len": 8}], f)
+    with pytest.raises(ValueError):
+        load_trace(path)
+    reqs = load_trace(path, vocab=32)
+    assert len(reqs[0].prompt) == 8
+    assert reqs[0].prompt.max() < 32
+
+
+def test_grouped_trace_shares_prefix_within_group():
+    reqs = make_grouped_prefix_trace(64, rate_req_s=10.0, n_requests=12,
+                                     n_groups=3, prefix_len=8, tail_len=4,
+                                     skew=0.8, seed=0)
+    by_group = {}
+    for r in reqs:
+        by_group.setdefault(r.session, []).append(r)
+    assert len(by_group) > 1
+    for grp in by_group.values():
+        heads = {g.prompt[:8].tobytes() for g in grp}
+        assert len(heads) == 1          # one system prompt per group
+    heads = {grp[0].prompt[:8].tobytes() for grp in by_group.values()}
+    assert len(heads) == len(by_group)  # distinct across groups
+
+
+# ---------------------------------------------------------------------------
+# Analytical cluster mirror
+# ---------------------------------------------------------------------------
+def _cluster(**kw):
+    spec = PAPER_MODELS["LLaMA3-70B"]
+    lat = nmp_latency_model(snake_system(), spec, tp=8)
+    return simulate_cluster(lat, spec, kw.pop("rate", 20.0), **kw)
+
+
+def test_sim_cluster_throughput_scales_with_replicas():
+    """Saturating arrivals, no sharing: 4 replicas deliver ~4x the tokens
+    per second of one replica (each still fills its decode batch)."""
+    kw = dict(rate=200.0, n_requests=64, input_len=512, output_len=256,
+              max_batch=8, page_size=64, n_groups=4, skew=0.0, seed=0)
+    one = _cluster(policy="round_robin", n_replicas=1, **kw)
+    four = _cluster(policy="round_robin", n_replicas=4, **kw)
+    assert one.completed == four.completed == 64
+    ratio = four.throughput_tok_s / one.throughput_tok_s
+    assert 3.0 <= ratio <= 4.5
+    assert max(four.per_replica_completed) \
+        - min(four.per_replica_completed) <= 1   # round robin balances
+
+
+def test_sim_cluster_prefix_affinity_beats_round_robin():
+    """Tight per-replica pools: fragmenting the communal prefixes across
+    replicas (round robin) duplicates pages and preempts; affinity
+    colocates, raising aggregate dedup without hurting the tail."""
+    kw = dict(rate=20.0, n_replicas=2, n_requests=32, input_len=2048,
+              output_len=512, max_batch=8, prefix_sharing=True,
+              shared_prefix_len=1536, n_groups=4, skew=0.8,
+              page_size=64, num_pages=120, seed=0)
+    rr = _cluster(policy="round_robin", **kw)
+    pa = _cluster(policy="prefix_affinity", **kw)
+    assert rr.completed == pa.completed == 32
+    assert pa.dedup_ratio > rr.dedup_ratio
+    assert pa.e2e_p99_s <= rr.e2e_p99_s
+    # session affinity (session == group here) matches prefix affinity
+    sa = _cluster(policy="session_affinity", **kw)
+    assert sa.dedup_ratio == pytest.approx(pa.dedup_ratio)
+
+
+def test_sim_cluster_rejects_bad_config():
+    from repro.core.serving_sim import Request
+    with pytest.raises(ValueError):
+        _cluster(policy="nope", n_replicas=2)
+    with pytest.raises(ValueError):
+        _cluster(policy="round_robin", n_replicas=1, num_pages=4,
+                 input_len=2048, output_len=512)
+    # explicit trace with prompts shorter than the claimed shared prefix
+    # must raise, not drive page accounting negative
+    with pytest.raises(ValueError):
+        _cluster(policy="round_robin", n_replicas=1,
+                 prefix_sharing=True, shared_prefix_len=1536,
+                 trace=[Request(0, 0.0, 512, 8)])
+
+
+def test_sim_cluster_trace_is_deterministic():
+    a = make_cluster_trace(10.0, 16, 128, 32, n_groups=3, skew=1.0, seed=5)
+    b = make_cluster_trace(10.0, 16, 128, 32, n_groups=3, skew=1.0, seed=5)
+    assert [(r.arrival_s, r.group) for r in a] \
+        == [(r.arrival_s, r.group) for r in b]
+    assert all(r.session == r.group for r in a)
+
+
+# ---------------------------------------------------------------------------
+# Real engine: router end-to-end
+# ---------------------------------------------------------------------------
+ENG_KW = dict(max_batch=3, max_seq=64, max_new_tokens=6, paged=True,
+              page_size=8, prefix_sharing=True, prefill_chunk=8)
+
+
+def _grouped_trace(entry, n=8, seed=0):
+    return make_grouped_prefix_trace(entry.config.vocab, rate_req_s=200.0,
+                                     n_requests=n, n_groups=2,
+                                     prefix_len=16, tail_len=6, skew=0.8,
+                                     seed=seed)
+
+
+@pytest.mark.slow
+def test_router_single_replica_token_exact():
+    entry = registry.get("yi-6b", reduced=True)
+    eng = make_engine(entry, EngineConfig(**ENG_KW))
+    eng.run_trace(_grouped_trace(entry))
+    base = {r.rid: r.tokens_out for r in eng.completed}
+    router = make_cluster(entry, EngineConfig(**ENG_KW), 1,
+                          policy="round_robin")
+    m = router.run_trace(_grouped_trace(entry))
+    got = {r.rid: r.tokens_out
+           for e in router.engines for r in e.completed}
+    assert got == base
+    assert m["requests"] == len(base)
+
+
+@pytest.mark.slow
+def test_router_prefix_affinity_dedup_ge_round_robin():
+    """Identical grouped trace, 2 sharing replicas: affinity must colocate
+    each group's pages and beat round robin's aggregate dedup without
+    changing a single decoded token."""
+    entry = registry.get("yi-6b", reduced=True)
+    out = {}
+    for policy in ("round_robin", "prefix_affinity"):
+        router = make_cluster(entry, EngineConfig(**ENG_KW), 2,
+                              policy=policy)
+        out[policy] = router.run_trace(_grouped_trace(entry, n=10))
+        out[policy]["tokens"] = {
+            r.rid: r.tokens_out
+            for e in router.engines for r in e.completed}
+    assert out["round_robin"]["tokens"] == out["prefix_affinity"]["tokens"]
+    assert out["prefix_affinity"]["dedup_ratio_agg"] \
+        >= out["round_robin"]["dedup_ratio_agg"]
+
+
+@pytest.mark.slow
+def test_paged_chunked_prefill_writes_direct_and_matches():
+    """The paged engine's chunk scheduler must bypass the dense staging
+    buffer (direct page writes) and still decode the exact tokens of the
+    unchunked sharing engine — including skipped writes on shared pages."""
+    entry = registry.get("yi-6b", reduced=True)
+    rng = np.random.default_rng(0)
+    vocab = entry.config.vocab
+    prefix = rng.integers(0, vocab, 16).astype(np.int32)
+    prompts = [np.concatenate([prefix,
+                               rng.integers(0, vocab, 5 + i
+                                            ).astype(np.int32)])
+               for i in range(3)]
+
+    def run(chunk):
+        kw = dict(ENG_KW)
+        kw["prefill_chunk"] = chunk
+        eng = make_engine(entry, EngineConfig(**kw))
+        reqs = [RequestState(i, p.copy(), arrival_s=0.0)
+                for i, p in enumerate(prompts)]
+        if chunk is not None:
+            assert eng.admit(reqs[0])
+            st = eng._prefilling
+            assert st is not None and st.get("direct") \
+                and "buf" not in st, "chunked prefill staged via buffer"
+            while eng._prefilling is not None:
+                eng._prefill_chunk_tick()
+            for r in reqs[1:]:
+                assert eng.admit(r)
+                while eng._prefilling is not None:
+                    eng._prefill_chunk_tick()
+        else:
+            for r in reqs:
+                assert eng.submit(r)
+        while eng.active:
+            eng.step()
+        return {r.rid: r.tokens_out for r in eng.completed}
+
+    assert run(chunk=6) == run(chunk=None)
+
+
+@pytest.mark.slow
+def test_engine_eos_aware_finish_reasons():
+    entry = registry.get("yi-6b", reduced=True)
+    eng = make_engine(entry, EngineConfig(max_batch=3, max_seq=64,
+                                          max_new_tokens=6, paged=True,
+                                          page_size=8))
+    m = eng.run_workload(rate_req_s=200.0, n_requests=6, prompt_len=10,
+                        seed=2, eos_rate=0.5)
+    assert m["finish_eos"] + m["finish_budget"] == m["requests"] == 6
+    assert m["finish_eos"] > 0           # rate 0.5 stops most early
+    for r in eng.completed:
+        budget = min(6, max(1, r.decode_len))
+        assert len(r.tokens_out) == budget
+        assert r.finish_reason == ("eos" if budget < 6 else "budget")
