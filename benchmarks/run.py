@@ -1,15 +1,22 @@
 """Benchmark harness entry point — one module per paper figure/table.
 
-  PYTHONPATH=src python -m benchmarks.run            # all
-  PYTHONPATH=src python -m benchmarks.run fig12      # one module
+  PYTHONPATH=src:. python benchmarks/run.py            # all, full sweeps
+  PYTHONPATH=src:. python benchmarks/run.py fig12      # one module
+  PYTHONPATH=src:. python benchmarks/run.py --smoke    # CI: every module,
+                                                       # reduced sweeps
 
-Prints ``name,us_per_call,derived[,paper=..][,note]`` CSV rows and dumps
-raw results to benchmarks/out/<module>.json.
+``--smoke`` passes ``smoke=True`` to every module whose ``run()`` accepts
+it (the serving sweeps) and runs the rest at full size — the single CI
+entry point replacing the old per-benchmark workflow steps.  Prints
+``name,us_per_call,derived[,paper=..][,note]`` CSV rows and dumps raw
+results to ``benchmarks/out/<module>.json`` (uploaded as CI artifacts).
+Exit code = number of failed modules.
 """
 from __future__ import annotations
 
+import argparse
 import importlib
-import sys
+import inspect
 import time
 import traceback
 
@@ -28,19 +35,30 @@ MODULES = [
     "serving_paged",       # paged vs dense engine on a skewed-length trace
     "serving_shared",      # refcounted prefix sharing on shared-prompt traces
     "serving_router",      # multi-replica routing policies (prefix affinity)
+    "serving_placement",   # stack-aware page placement (gather-cost sweep)
 ]
 
 
 def main() -> int:
-    only = sys.argv[1:] or None
+    ap = argparse.ArgumentParser()
+    ap.add_argument("modules", nargs="*",
+                    help="run only modules matching these prefixes")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sweeps where supported (CI entry point)")
+    args = ap.parse_args()
     failures = 0
     for name in MODULES:
-        if only and not any(name.startswith(o) for o in only):
+        if args.modules and not any(name.startswith(o)
+                                    for o in args.modules):
             continue
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
+            kwargs = {}
+            if args.smoke and "smoke" in \
+                    inspect.signature(mod.run).parameters:
+                kwargs["smoke"] = True
             t0 = time.time()
-            rows = mod.run()
+            rows = mod.run(**kwargs)
             emit(name, rows, time.time() - t0)
         except Exception:
             failures += 1

@@ -51,3 +51,25 @@ def all_to_all(sys: NMPSystem, total_bytes: int) -> CollectiveCost:
     t = (per_pu / sys.noc_link_bw_bytes
          + (p - 1) * sys.noc_latency_cycles / sys.freq_hz)
     return CollectiveCost(int(per_pu * p), t)
+
+
+def page_gather(sys: NMPSystem, local_bytes: float, remote_bytes: float,
+                remote_segments: int) -> CollectiveCost:
+    """Paged KV gather DMA, issued by ONE PU.
+
+    Pages under the issuing PU's own memory channel stream at that
+    channel's internal bandwidth (``dram_bw_per_pu``); pages under other
+    channels must cross the NoC and all funnel through the issuing PU's
+    single injection port (``noc_link_bw_bytes``), serialized, plus one
+    per-segment hop latency for each distinct remote channel touched.
+    This is the asymmetry stack-aware placement exists to exploit: on
+    the Stratum-class template the channel-internal path is ~2.4x the
+    injection port, so a block table concentrated in one region beats
+    the same table striped across the die.
+    """
+    if local_bytes < 0 or remote_bytes < 0 or remote_segments < 0:
+        raise ValueError("gather byte counts must be non-negative")
+    t = (local_bytes / sys.dram_bw_per_pu
+         + remote_bytes / sys.noc_link_bw_bytes
+         + remote_segments * sys.noc_latency_cycles / sys.freq_hz)
+    return CollectiveCost(int(remote_bytes), t)

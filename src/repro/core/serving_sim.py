@@ -19,6 +19,9 @@ from repro.core.gpu_model import gpu_decode_step
 from repro.core.hw import H100, GPUConfig, NMPSystem
 from repro.core.operators import ModelSpec
 from repro.core.pipeline import decode_step
+from repro.core.placement import (COMMUNAL, PLACEMENT_POLICIES,
+                                  default_system, gather_cost,
+                                  kv_bytes_per_token)
 
 
 @dataclass
@@ -37,6 +40,10 @@ class Request:
     # the prompt belongs to, and the session affinity id
     group: int = 0
     session: int = 0
+    # stack-aware placement (simulate_serving placement=...): private
+    # pages per channel region, and the home region chosen at admission
+    region_pages: Dict[int, int] = field(default_factory=dict)
+    home: int = 0
 
     def ctx(self) -> int:
         return self.input_len + self.tokens_out
@@ -58,6 +65,10 @@ class ServingReport:
     max_decode_stall_s: float = 0.0  # longest gap decode waited on prefill
     preemptions: int = 0
     dedup_ratio: float = 1.0        # peak logical/physical pages (sharing)
+    # stack-aware placement metrics (placement=... only)
+    gather_cost_mean_s: float = 0.0  # mean per-slot block-table DMA cost
+    gather_concentration: float = 1.0  # mean majority-channel page share
+    region_peak_pages: Tuple[int, ...] = ()  # peak occupancy per region
 
     def normalized_to(self, base: "ServingReport") -> Tuple[float, float]:
         return (self.e2e_mean_s / base.e2e_mean_s,
@@ -113,7 +124,10 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
                      prefill_chunk: Optional[int] = None,
                      prefill_on_device: bool = False,
                      prefix_sharing: bool = False,
-                     shared_prefix_len: int = 0) -> ServingReport:
+                     shared_prefix_len: int = 0,
+                     placement: Optional[str] = None,
+                     n_regions: int = 4,
+                     hw: Optional[NMPSystem] = None) -> ServingReport:
     """Analytical serving simulation.
 
     Mirrors the real-JAX engine's two policy axes (same defaults keep the
@@ -141,6 +155,20 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
       logical/physical page ratio — the admissible-batch multiplier per
       resident page.  Tails are unique, so copy-on-write forks never
       trigger in this analytical mirror.
+    * ``placement`` (paged only): mirror of the engine's stack-aware page
+      placement.  The page pool splits into ``n_regions`` per-channel
+      regions (plus a communal region sized exactly for the shared
+      prefix, which every holder reads remotely); private pages place
+      under ``free-first`` (lowest region first — the legacy free-list
+      layout), ``interleave`` (striped round-robin), or ``affinity``
+      (home region chosen at admission, spill to the emptiest other
+      region).  Each decode iteration scores every active request's
+      region histogram with ``core.placement.gather_cost`` on ``hw``
+      (default: the SNAKE template) — reported as ``gather_cost_mean_s``
+      / ``gather_concentration`` / ``region_peak_pages``.  Placement
+      never changes admission (spill keeps success a function of the
+      global free count alone), so latency/throughput stay identical
+      across policies; the gather-cost metric is what separates them.
     """
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(1.0 / rate_req_s, size=n_requests)
@@ -177,6 +205,70 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
     free_pages = pages_cap
     dense_reserved = max_batch * (input_len + output_len)
 
+    # --- stack-aware placement (per-channel region pools) -------------------
+    if placement is not None:
+        if placement not in PLACEMENT_POLICIES:
+            raise ValueError(f"unknown placement {placement!r}; "
+                             f"choose from {PLACEMENT_POLICIES}")
+        if not paged:
+            raise ValueError("placement requires cache_mode='paged'")
+    place = placement is not None
+    slot_cap = pages_cap - shared_full      # communal region carved off
+    n_reg = max(1, min(n_regions, slot_cap)) if place else 1
+    region_cap = [slot_cap // n_reg + (1 if r < slot_cap % n_reg else 0)
+                  for r in range(n_reg)]
+    region_free = list(region_cap)
+    region_peak = [0] * n_reg
+    hw_sys = hw or default_system()
+    bytes_per_page = kv_bytes_per_token(spec) * page_size
+    rr_cursor = 0                   # interleave striping cursor
+    gather_sum = conc_sum = 0.0
+    gather_iters = 0
+
+    def place_private(r: Request, k: int) -> None:
+        """Distribute ``k`` freshly charged private pages over the slot
+        regions per the placement policy (mirrors PageAllocator)."""
+        nonlocal rr_cursor
+        if not place or k == 0:
+            return
+        if placement == "interleave":       # one page per region in turn
+            avail = list(region_free)
+            order = []
+            while len(order) < k and any(a > 0 for a in avail):
+                x = rr_cursor % n_reg
+                rr_cursor += 1
+                if avail[x] > 0:
+                    avail[x] -= 1
+                    order.append(x)
+            takes = [(x, 1) for x in order]
+        else:
+            if placement == "affinity":
+                order = [r.home] + sorted(
+                    (x for x in range(n_reg) if x != r.home),
+                    key=lambda x: (-region_free[x], x))
+            else:                           # free-first: lowest region up
+                order = list(range(n_reg))
+            takes, left = [], k
+            for x in order:
+                got = min(left, region_free[x])
+                if got:
+                    takes.append((x, got))
+                    left -= got
+        for x, got in takes:
+            region_free[x] -= got
+            r.region_pages[x] = r.region_pages.get(x, 0) + got
+            region_peak[x] = max(region_peak[x],
+                                 region_cap[x] - region_free[x])
+            k -= got
+        assert k == 0, "private pages exceeded the slot regions"
+
+    def unplace(r: Request) -> None:
+        if not place:
+            return
+        for x, cnt in r.region_pages.items():
+            region_free[x] += cnt
+        r.region_pages = {}
+
     def ready_time(r: Request) -> float:
         return r.arrival_s if prefill_on_device else r.prefill_done_s
 
@@ -203,6 +295,10 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
             return False
         free_pages -= need + extra
         r.pages_held = need
+        if place:
+            # home region = most free pages at admission, ties lowest id
+            r.home = min(range(n_reg), key=lambda x: (-region_free[x], x))
+            place_private(r, need)
         if sharing:
             prefix_refs += 1
         return True
@@ -212,6 +308,7 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
         if paged:
             free_pages += r.pages_held
             r.pages_held = 0
+            unplace(r)
             if sharing:
                 prefix_refs -= 1
                 if prefix_refs == 0:    # last holder frees the prefix
@@ -280,6 +377,20 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
             util_integral += (used / reserved) * dt
             util_time += dt
 
+        # --- gather-cost scoring (stack-aware placement) --------------------
+        if place and decoding:
+            costs, concs = [], []
+            for r in decoding:
+                counts = dict(r.region_pages)
+                if sharing:     # every holder also reads the communal pages
+                    counts[COMMUNAL] = shared_full
+                gc = gather_cost(hw_sys, counts, bytes_per_page)
+                costs.append(gc.time_s)
+                concs.append(gc.concentration)
+            gather_sum += float(np.mean(costs))
+            conc_sum += float(np.mean(concs))
+            gather_iters += 1
+
         # --- decode token + on-demand page growth ---------------------------
         for r in decoding:
             if r not in active:     # preempted earlier in this iteration
@@ -293,6 +404,7 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
                                            "request")
                 free_pages -= need
                 r.pages_held += need
+                place_private(r, need)
             r.tokens_out += 1
             r.token_times.append(clock)
             if paged:               # growth may move the peak mid-iteration
@@ -324,7 +436,13 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
                          kv_peak_tokens=int(kv_peak),
                          max_decode_stall_s=max_stall,
                          preemptions=preemptions,
-                         dedup_ratio=dedup_peak)
+                         dedup_ratio=dedup_peak,
+                         gather_cost_mean_s=(gather_sum / gather_iters
+                                             if gather_iters else 0.0),
+                         gather_concentration=(conc_sum / gather_iters
+                                               if gather_iters else 1.0),
+                         region_peak_pages=(tuple(region_peak)
+                                            if place else ()))
 
 
 # ---------------------------------------------------------------------------

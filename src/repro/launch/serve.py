@@ -12,7 +12,10 @@ decode batch (written directly into block-table pages on the paged
 engine).  ``--prefix-sharing`` adds refcounted prompt-prefix pages with
 copy-on-write; combine it with ``--shared-prefix N`` to drive a
 shared-system-prompt trace (every prompt = N common tokens + a unique
-tail) and watch the dedup ratio in the report.
+tail) and watch the dedup ratio in the report.  ``--placement
+{free-first,interleave,affinity}`` partitions the page pool into
+per-channel regions (``--placement-regions``) and reports the
+block-table gather cost against the SNAKE substrate.
 
 Multi-replica serving (PR 3): ``--replicas N`` stands up N engine
 replicas behind the front-end router and ``--router-policy`` picks the
@@ -83,6 +86,16 @@ def main():
     ap.add_argument("--defrag-threshold", type=float, default=0.5,
                     help="fragmentation fraction that triggers pool "
                          "defrag (negative disables)")
+    ap.add_argument("--placement", default=None,
+                    choices=["free-first", "interleave", "affinity"],
+                    help="stack-aware page placement: partition the page "
+                         "pool into per-channel regions and co-locate "
+                         "(affinity) or stripe (interleave) each slot's "
+                         "pages; free-first keeps the legacy layout but "
+                         "reports its gather cost")
+    ap.add_argument("--placement-regions", type=int, default=None,
+                    help="per-channel regions (default: one per PU of "
+                         "the SNAKE template, capped by pool size)")
     ap.add_argument("--replicas", type=int, default=1,
                     help="engine replicas behind the front-end router")
     ap.add_argument("--router-policy", choices=POLICIES,
@@ -105,6 +118,9 @@ def main():
     if args.router_policy == "prefix_affinity" and not args.prefix_sharing:
         ap.error("--router-policy prefix_affinity requires "
                  "--prefix-sharing (nothing resident to probe otherwise)")
+    if args.placement and not args.paged:
+        ap.error("--placement requires --paged (the dense cache has no "
+                 "page pool to partition)")
 
     entry = registry.get(args.arch, reduced=not args.full)
     ecfg = EngineConfig(max_batch=args.max_batch,
@@ -117,7 +133,9 @@ def main():
                         num_pages=args.num_pages,
                         prefix_sharing=args.prefix_sharing,
                         defrag_threshold=(None if args.defrag_threshold < 0
-                                          else args.defrag_threshold))
+                                          else args.defrag_threshold),
+                        placement=args.placement,
+                        placement_regions=args.placement_regions)
     reqs = build_trace(args, entry.config.vocab)
     if args.replicas > 1:
         router = make_cluster(entry, ecfg, args.replicas,

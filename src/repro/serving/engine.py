@@ -88,6 +88,15 @@ class EngineConfig:
     # run PagedCache.defrag() when the fraction of holes below the
     # high-water page index exceeds this (None disables the trigger)
     defrag_threshold: Optional[float] = 0.5
+    # stack-aware page placement (core/placement.py): None keeps the
+    # legacy layout with no region accounting; "free-first" keeps the
+    # legacy layout but scores it; "affinity" co-locates a slot's pages
+    # in one per-channel region; "interleave" stripes them
+    placement: Optional[str] = None
+    placement_regions: Optional[int] = None   # default: one per PU, capped
+    # fraction of the pool carved off for shared prefix pages (placement
+    # + prefix_sharing only)
+    communal_frac: float = 0.25
 
 
 def _insert_slot(cache, new, slot: int):
@@ -393,11 +402,24 @@ class PagedServingEngine(ServingEngine):
             raise ValueError(
                 f"num_pages={n_pages} cannot hold even one max-length "
                 f"context ({max_blocks} pages)")
+        pmap = None
+        self._hw = None
+        if ecfg.placement is not None:
+            from repro.core.placement import PlacementMap, default_system
+            self._hw = default_system()
+            pmap = PlacementMap.from_system(
+                self._hw, n_pages,
+                communal_frac=(ecfg.communal_frac
+                               if ecfg.prefix_sharing else 0.0),
+                n_regions=ecfg.placement_regions)
         self.paged = PagedCache(self.entry, max_batch=ecfg.max_batch,
                                 max_seq=ecfg.max_seq,
                                 page_size=ecfg.page_size,
                                 num_pages=n_pages, tp=self.tp,
-                                share=ecfg.prefix_sharing)
+                                share=ecfg.prefix_sharing,
+                                placement=pmap,
+                                placement_policy=(ecfg.placement
+                                                  or "free-first"))
         # PagedCache rounds max_seq up to a whole number of pages; adopt
         # the rounded value so prefill buffers, gather views and occupancy
         # math all agree with the table capacity (kv_report asserts this)
@@ -407,6 +429,10 @@ class PagedServingEngine(ServingEngine):
         self.pages_logical_peak = 0
         self.dedup_ratio_peak = 1.0
         self.defrag_runs = 0
+        self._gather_cost_sum = 0.0
+        self._gather_conc_sum = 0.0
+        self._gather_cost_steps = 0
+        self._region_peak: Dict[int, int] = {}
         self._paged_decode = None   # built lazily (pallas path)
 
     # -- capacity ------------------------------------------------------
@@ -451,11 +477,33 @@ class PagedServingEngine(ServingEngine):
         if physical:
             self.dedup_ratio_peak = max(self.dedup_ratio_peak,
                                         logical / physical)
+        if self.paged.placement is not None:
+            for r, u in self.paged.alloc.region_used().items():
+                self._region_peak[r] = max(self._region_peak.get(r, 0), u)
+
+    def _note_gather_cost(self) -> None:
+        """Score the active slots' block tables against the substrate
+        (one sample per decode iteration)."""
+        if self.paged.placement is None or not self.active:
+            return
+        cost, conc = self.paged.gather_cost_mean(
+            self._hw, slots=sorted(self.active))
+        self._gather_cost_sum += cost
+        self._gather_conc_sum += conc
+        self._gather_cost_steps += 1
 
     def load_report(self) -> dict:
         rep = super().load_report()
         if self.paged.has_seq:
             rep["free_pages"] = self.paged.alloc.free_pages
+            if self.paged.placement is not None:
+                # per-region pressure: the scarcest slot region is what
+                # gates an affinity admission staying fully co-located
+                free = self.paged.alloc.region_free()
+                slot_free = [free[r] for r in free if r >= 0]
+                rep["region_free"] = slot_free
+                rep["min_region_free"] = min(slot_free)
+        rep.setdefault("min_region_free", rep["free_pages"])
         return rep
 
     def prefix_residency(self, prompt: np.ndarray) -> int:
@@ -526,6 +574,15 @@ class PagedServingEngine(ServingEngine):
                "dedup_ratio_peak": self.dedup_ratio_peak,
                "defrag_runs": self.defrag_runs}
         rep.update(self.paged.sharing_report())
+        if self.paged.placement is not None:
+            steps = max(1, self._gather_cost_steps)
+            rep.update(self.paged.placement_report())
+            rep["region_peak"] = {str(r): u
+                                  for r, u in self._region_peak.items()}
+            rep["gather_cost_mean_s"] = self._gather_cost_sum / steps
+            rep["gather_concentration_mean"] = (
+                self._gather_conc_sum / steps
+                if self._gather_cost_steps else 1.0)
         return rep
 
     # -- decode --------------------------------------------------------
@@ -582,6 +639,7 @@ class PagedServingEngine(ServingEngine):
 
     def _decode_batch(self, toks: jax.Array) -> jax.Array:
         ecfg = self.ecfg
+        self._note_gather_cost()
         lengths_pre = self._lengths_host.copy()
         active = np.zeros((ecfg.max_batch,), bool)
         for s in self.active:

@@ -47,13 +47,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.gemm import ceil_div
+from repro.core.placement import (COMMUNAL, PLACEMENT_POLICIES, GatherCost,
+                                  PlacementMap, gather_cost)
 
 
 # ---------------------------------------------------------------------------
 # Host-side block allocator
 # ---------------------------------------------------------------------------
 class PageAllocator:
-    """Refcounted free-list page allocator (host side, O(1) alloc/free).
+    """Refcounted free-list page allocator (host side).
 
     Pages are plain ints ``0..num_pages-1``.  ``alloc`` returns ``None``
     (allocating nothing) when the request cannot be satisfied — admission
@@ -62,17 +64,55 @@ class PageAllocator:
     page, and ``decref``/``free`` return a page to the free list only when
     the last reference drops — no page is ever freed while its refcount is
     still positive.
+
+    **Placement** (``placement`` + ``policy``): with a
+    :class:`~repro.core.placement.PlacementMap` the allocator places
+    pages substrate-aware.  ``free-first`` keeps the legacy LIFO layout
+    (wherever the free list points); ``affinity`` prefers the caller's
+    ``home`` region (or the communal region for ``communal=True`` shared
+    prefix pages), spilling to the emptiest other region only when the
+    preferred one runs dry; ``interleave`` stripes pages round-robin
+    across slot regions.  Placement only changes WHICH free pages are
+    picked — success/failure depends solely on the global free count, so
+    admission control (and therefore scheduling) is identical across
+    policies.
     """
 
-    def __init__(self, num_pages: int):
+    def __init__(self, num_pages: int,
+                 placement: Optional[PlacementMap] = None,
+                 policy: str = "free-first"):
         if num_pages <= 0:
             raise ValueError("num_pages must be positive")
+        if policy not in PLACEMENT_POLICIES:
+            raise ValueError(f"unknown placement policy {policy!r}; "
+                             f"choose from {PLACEMENT_POLICIES}")
+        if placement is not None and placement.num_pages != num_pages:
+            raise ValueError(
+                f"placement map covers {placement.num_pages} pages, "
+                f"allocator has {num_pages}")
         self.num_pages = num_pages
-        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self.placement = placement
+        self.policy = policy
+        self._rr = 0                    # interleave striping cursor
         self._refs: Dict[int, int] = {}
+        self._init_free()
+
+    def _init_free(self) -> None:
+        if self.placed:
+            # persistent per-region free lists (placed mode): descending
+            # so pop() hands out each region's lowest index first — the
+            # same LIFO invariant as the global list, at O(1) per page
+            self._region_lists: Dict[int, List[int]] = {
+                r: sorted(self.placement.region_pages(r), reverse=True)
+                for r in self.placement.regions()}
+            self._free: List[int] = []      # unused in placed mode
+        else:
+            self._free = list(range(self.num_pages - 1, -1, -1))
 
     @property
     def free_pages(self) -> int:
+        if self.placed:
+            return sum(len(v) for v in self._region_lists.values())
         return len(self._free)
 
     @property
@@ -94,12 +134,90 @@ class PageAllocator:
     def refcount(self, page: int) -> int:
         return self._refs.get(page, 0)
 
-    def alloc(self, n: int) -> Optional[List[int]]:
+    # -- placement geometry ------------------------------------------------
+    @property
+    def placed(self) -> bool:
+        """True when allocation actively steers placement (a map under a
+        non-legacy policy)."""
+        return self.placement is not None and self.policy != "free-first"
+
+    def region_free(self) -> Dict[int, int]:
+        """Free pages per region (requires a placement map)."""
+        assert self.placement is not None
+        if self.placed:
+            return {r: len(v) for r, v in self._region_lists.items()}
+        out = {r: 0 for r in self.placement.regions()}
+        for p in self._free:
+            out[self.placement.region_of(p)] += 1
+        return out
+
+    def region_used(self) -> Dict[int, int]:
+        """Allocated pages per region (requires a placement map)."""
+        assert self.placement is not None
+        out = {r: 0 for r in self.placement.regions()}
+        for p in self._refs:
+            out[self.placement.region_of(p)] += 1
+        return out
+
+    def _select(self, n: int, home: Optional[int],
+                n_communal: int) -> List[int]:
+        """Pop ``n`` free pages off the per-region lists under the
+        placement policy (caller has checked the global free count).
+        The first ``n_communal`` picks prefer the communal region; the
+        rest follow the policy.  O(1) per page."""
+        pmap = self.placement
+        lists = self._region_lists
+        picks: List[int] = []
+
+        def take_from(region: int, k: int) -> int:
+            pool = lists.get(region, [])
+            got = min(k, len(pool))
+            for _ in range(got):
+                picks.append(pool.pop())
+            return got
+
+        # shared (publishable) pages go communal under every placement
+        # policy: all slots read them, so no slot channel is favored —
+        # overflow falls through to the private-page policy below
+        want = n - take_from(COMMUNAL, min(n_communal, n)) \
+            if pmap.communal_pages else n
+        if self.policy == "interleave":
+            ring = list(range(pmap.n_regions))
+            while want > 0:
+                if not any(lists[r] for r in ring):
+                    want -= take_from(COMMUNAL, want)   # only communal left
+                    break
+                r = ring[self._rr % len(ring)]
+                self._rr += 1
+                want -= take_from(r, min(1, want)) if lists[r] else 0
+            return picks
+        # affinity: home region first, then spill to the emptiest-used
+        # (most-free) other regions, deterministic ties by region id
+        order = [home] if home is not None else []
+        order.extend(sorted(
+            (r for r in pmap.regions() if r not in order),
+            key=lambda r: (r == COMMUNAL, -len(lists[r]), r)))
+        for r in order:
+            want -= take_from(r, want)
+            if want == 0:
+                break
+        return picks
+
+    def alloc(self, n: int, *, home: Optional[int] = None,
+              communal: int = 0) -> Optional[List[int]]:
+        """Allocate ``n`` pages; ``home`` steers private pages and the
+        first ``communal`` of them prefer the communal region (both
+        ignored under the legacy free-first policy).  Atomic: returns
+        ``None`` without mutating when fewer than ``n`` pages are free."""
         if n < 0:
             raise ValueError("alloc size must be >= 0")
-        if n > len(self._free):
+        if n > self.free_pages:
             return None
-        pages = [self._free.pop() for _ in range(n)]
+        if not self.placed:
+            pages = [self._free.pop() for _ in range(n)]
+        else:
+            pages = self._select(n, home, communal)
+            assert len(pages) == n
         for p in pages:
             self._refs[p] = 1
         return pages
@@ -117,7 +235,11 @@ class PageAllocator:
             raise ValueError(f"double free / foreign page {page}")
         if rc == 1:
             del self._refs[page]
-            self._free.append(page)
+            if self.placed:
+                self._region_lists[self.placement.region_of(page)] \
+                    .append(page)
+            else:
+                self._free.append(page)
             return True
         self._refs[page] = rc - 1
         return False
@@ -142,12 +264,20 @@ class PageAllocator:
             if rc <= 0:
                 raise ValueError(f"page {p} has non-positive refcount {rc}")
         self._refs = dict(refcounts)
-        self._free = [p for p in range(self.num_pages - 1, -1, -1)
-                      if p not in self._refs]
+        if self.placed:
+            self._region_lists = {
+                r: [p for p in sorted(self.placement.region_pages(r),
+                                      reverse=True)
+                    if p not in self._refs]
+                for r in self.placement.regions()}
+        else:
+            self._free = [p for p in range(self.num_pages - 1, -1, -1)
+                          if p not in self._refs]
 
     def reset(self) -> None:
-        self._free = list(range(self.num_pages - 1, -1, -1))
         self._refs.clear()
+        self._rr = 0
+        self._init_free()
 
 
 # ---------------------------------------------------------------------------
@@ -325,6 +455,8 @@ class PagedCache:
     num_pages: int
     tp: int = 1
     share: bool = False
+    placement: Optional[PlacementMap] = None
+    placement_policy: str = "free-first"
 
     def __post_init__(self):
         if self.page_size <= 0:
@@ -335,7 +467,11 @@ class PagedCache:
             self.max_seq = num_blocks(self.max_seq,
                                       self.page_size) * self.page_size
         self.max_blocks = self.max_seq // self.page_size
-        self.alloc = PageAllocator(self.num_pages)
+        self.alloc = PageAllocator(self.num_pages,
+                                   placement=self.placement,
+                                   policy=self.placement_policy)
+        # per-slot home region (affinity placement); -1 = unassigned
+        self.home_region: Dict[int, int] = {}
         self.tables = np.full((self.max_batch, self.max_blocks), -1,
                               np.int32)
         self._tables_dev = None
@@ -365,6 +501,7 @@ class PagedCache:
         self.shared_count = np.zeros((self.max_batch,), np.int64)
         self._pending_prompt: Dict[int, np.ndarray] = {}
         self.cow_forks = 0
+        self._bytes_per_page: Optional[int] = None
 
     # -- block-table bookkeeping -------------------------------------------
     def _invalidate(self):
@@ -394,11 +531,22 @@ class PagedCache:
 
     def fragmentation(self) -> float:
         """Fraction of holes below the high-water page index (0 = the live
-        set is compact at the lowest indices)."""
+        set is compact at the lowest indices).  With a placement map the
+        high-water mark is per region — affinity deliberately spreads
+        slots across regions, which is placement, not fragmentation."""
         used = self.alloc.used_pages
         if used == 0:
             return 0.0
-        return 1.0 - used / (self.alloc.highest_used() + 1)
+        if self.placement is None:
+            return 1.0 - used / (self.alloc.highest_used() + 1)
+        pmap = self.placement
+        high: Dict[int, int] = {}       # region -> high-water page
+        for p in self.alloc.live_pages():
+            r = pmap.region_of(p)
+            high[r] = max(high.get(r, p), p)
+        span = sum(hw - pmap.region_pages(r).start + 1
+                   for r, hw in high.items())
+        return 1.0 - used / span if span else 0.0
 
     def sharing_report(self) -> Dict[str, Any]:
         logical = self.logical_pages()
@@ -438,7 +586,16 @@ class PagedCache:
         shared: List[int] = []
         if self.share and tokens is not None and len(tokens):
             shared = self.prefix.match(np.asarray(tokens), self.page_size)
-        fresh = self.alloc.alloc(need - len(shared))
+        home = self._assign_home(slot)
+        # full prompt pages are publishable as trie edges, so they go
+        # communal (any future holder reads them — no slot channel is
+        # favored); the ragged tail + decode pages are private -> home
+        n_communal = 0
+        if self.share and tokens is not None:
+            n_communal = max(0, len(tokens) // self.page_size
+                             - len(shared))
+        fresh = self.alloc.alloc(need - len(shared), home=home,
+                                 communal=n_communal)
         if fresh is None:
             return False
         for p in shared:
@@ -451,9 +608,22 @@ class PagedCache:
         self._invalidate()
         return True
 
+    def _assign_home(self, slot: int) -> Optional[int]:
+        """Pick (and remember) the slot's home region: the slot region
+        with the most free pages at admission, deterministic ties to the
+        lowest id.  None without active placement."""
+        if not self.alloc.placed:
+            return None
+        free = self.alloc.region_free()
+        home = min((r for r in free if r != COMMUNAL),
+                   key=lambda r: (-free[r], r))
+        self.home_region[slot] = home
+        return home
+
     def extend_slot(self, slot: int, n_tokens: int) -> bool:
         """Grow a slot's mapping to cover ``n_tokens`` total (on-demand
-        decode growth).  No-op if already covered."""
+        decode growth).  Growth pages are private to the slot, so they
+        prefer its home region.  No-op if already covered."""
         if not self.has_seq:
             return True
         have = len(self.blocks_of(slot))
@@ -462,7 +632,8 @@ class PagedCache:
             return True
         if need > self.max_blocks:
             return False
-        pages = self.alloc.alloc(need - have)
+        pages = self.alloc.alloc(need - have,
+                                 home=self.home_region.get(slot))
         if pages is None:
             return False
         self.tables[slot, have:need] = pages
@@ -476,6 +647,7 @@ class PagedCache:
         self.tables[slot, :] = -1
         self.shared_count[slot] = 0
         self._pending_prompt.pop(slot, None)
+        self.home_region.pop(slot, None)
         self._invalidate()
 
     def reset(self) -> None:
@@ -483,6 +655,7 @@ class PagedCache:
         self.tables[:, :] = -1
         self.shared_count[:] = 0
         self._pending_prompt.clear()
+        self.home_region.clear()
         if self.share:
             self.prefix = PrefixIndex()
         self.cow_forks = 0
@@ -514,7 +687,8 @@ class PagedCache:
         in place for the remaining holders."""
         old = int(self.tables[slot, blk])
         assert old >= 0, "fork of unmapped table entry"
-        got = self.alloc.alloc(1)
+        # the fork is a private copy: it belongs in the slot's home region
+        got = self.alloc.alloc(1, home=self.home_region.get(slot))
         if got is None:
             return False
         new = got[0]
@@ -687,9 +861,30 @@ class PagedCache:
         device; block tables, the prefix trie, and the allocator (via its
         public ``rebuild``, refcounts preserved) are renumbered so the
         logical contents (``gather()``) are unchanged.
+
+        With a placement map, compaction is **region-preserving**: each
+        region's live pages compact to that region's lowest indices and
+        never migrate across regions (a cross-region move would be a
+        physical DMA copy through the NoC — exactly the traffic placement
+        exists to avoid).  The prefix trie is renumbered through the same
+        constrained mapping, so a trie hit after defrag still points at a
+        live page in the original channel region; both invariants are
+        asserted below.
         """
         live = self.alloc.live_pages()
-        mapping = {old: new for new, old in enumerate(live)}
+        if self.placement is None:
+            mapping = {old: new for new, old in enumerate(live)}
+        else:
+            mapping = {}
+            for r in self.placement.regions():
+                live_r = [p for p in live
+                          if self.placement.region_of(p) == r]
+                for p, tgt in zip(live_r, self.placement.region_pages(r)):
+                    mapping[p] = tgt
+            assert all(self.placement.region_of(o)
+                       == self.placement.region_of(n)
+                       for o, n in mapping.items()), \
+                "defrag target crossed a placement region"
         if all(o == n for o, n in mapping.items()):
             return mapping
         perm = np.arange(self.num_pages + 1)
@@ -709,8 +904,71 @@ class PagedCache:
                             for p in live})
         if self.prefix is not None:
             self.prefix.remap(mapping)
+            # region-constrained targets must keep the trie consistent:
+            # every registered page is still allocated after renumbering
+            assert all(self.alloc.refcount(p) > 0
+                       for p in self.prefix._by_page), \
+                "defrag left the prefix trie pointing at a dead page"
         self._invalidate()
         return mapping
+
+    # -- placement scoring -------------------------------------------------
+    def bytes_per_page(self) -> int:
+        """Bytes one physical page holds across all paged leaves/layers
+        (the per-page gather payload).  Pool shapes are fixed at
+        construction, so the first computation is cached."""
+        if self._bytes_per_page is None:
+            self._bytes_per_page = sum(
+                int(np.prod([d for i, d in enumerate(pool.shape)
+                             if i != 1])) * pool.dtype.itemsize
+                for pool, seq in zip(self.store, self.is_seq) if seq)
+        return self._bytes_per_page
+
+    def slot_region_counts(self, slot: int) -> Dict[int, int]:
+        """Region histogram of the slot's mapped pages (requires a
+        placement map)."""
+        assert self.placement is not None
+        counts: Dict[int, int] = {}
+        for p in self.blocks_of(slot):
+            r = self.placement.region_of(p)
+            counts[r] = counts.get(r, 0) + 1
+        return counts
+
+    def gather_cost_slot(self, sys, slot: int) -> Optional[GatherCost]:
+        """DMA/NoC cost of this slot's block-table gather on ``sys``
+        (None when the slot has no pages mapped).  Scored from the
+        majority region for every policy — the scheduling half of the
+        co-design issues the gather from the PU already holding most of
+        the table."""
+        if self.placement is None or not self.blocks_of(slot):
+            return None
+        counts = self.slot_region_counts(slot)
+        return gather_cost(sys, counts, self.bytes_per_page())
+
+    def gather_cost_mean(self, sys, slots: Optional[Sequence[int]] = None
+                         ) -> Tuple[float, float]:
+        """Mean (gather time, home-channel concentration) over the given
+        slots (default: every slot with pages mapped)."""
+        if slots is None:
+            slots = [s for s in range(self.max_batch) if self.blocks_of(s)]
+        costs = [c for c in (self.gather_cost_slot(sys, s) for s in slots)
+                 if c is not None]
+        if not costs:
+            return 0.0, 1.0
+        return (float(np.mean([c.time_s for c in costs])),
+                float(np.mean([c.concentration for c in costs])))
+
+    def placement_report(self) -> Dict[str, Any]:
+        """Per-region pressure snapshot (empty without a placement map)."""
+        if self.placement is None:
+            return {}
+        used = self.alloc.region_used()
+        free = self.alloc.region_free()
+        return {"placement_policy": self.placement_policy,
+                "n_regions": self.placement.n_regions,
+                "communal_pages": self.placement.communal_pages,
+                "region_used": {str(r): used[r] for r in used},
+                "region_free": {str(r): free[r] for r in free}}
 
 
 # ---------------------------------------------------------------------------

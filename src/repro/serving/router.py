@@ -65,10 +65,17 @@ class Router:
         self.dispatch_log: List[Tuple[int, int]] = []
 
     # -- policy --------------------------------------------------------
-    def _load_score(self, i: int) -> Tuple[int, int, int]:
+    def _load_score(self, i: int) -> Tuple[int, int, int, int]:
         rep = self.engines[i].load_report()
         backlog = rep["queue_depth"] + len(self.schedulers[i].pending)
-        return (backlog, -rep["free_pages"], i)
+        # placement-aware tiebreak: of two replicas with equal total
+        # headroom, prefer the one whose scarcest per-channel region has
+        # the most free pages — an affinity admission there stays
+        # co-located instead of spilling across the NoC (replicas
+        # without a placement map report min_region_free == free_pages,
+        # so the extra component is inert for them)
+        return (backlog, -rep["free_pages"],
+                -rep.get("min_region_free", rep["free_pages"]), i)
 
     def _least_loaded(self, among: Optional[Sequence[int]] = None) -> int:
         return min(among if among is not None

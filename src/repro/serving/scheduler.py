@@ -308,4 +308,10 @@ class Scheduler:
                 "kv_shared_pages": kv.get("shared_pages", 0),
                 "kv_dedup_ratio_peak": kv.get("dedup_ratio_peak", 1.0),
                 "cow_forks": kv.get("cow_forks", 0),
-                "defrag_runs": kv.get("defrag_runs", 0)}
+                "defrag_runs": kv.get("defrag_runs", 0),
+                # stack-aware placement (engines with a placement map)
+                "placement_policy": kv.get("placement_policy", "none"),
+                "kv_gather_cost_mean_s": kv.get("gather_cost_mean_s", 0.0),
+                "kv_gather_concentration":
+                    kv.get("gather_concentration_mean", 1.0),
+                "kv_region_peak": kv.get("region_peak", {})}

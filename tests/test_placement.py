@@ -1,0 +1,322 @@
+"""Stack-aware page placement tests: PlacementMap partition geometry,
+placement-policy allocation (co-location / striping / spill), the
+gather DMA cost model, region-preserving defrag (deterministic +
+hypothesis property, plus the prefix-trie renumbering regression), the
+engine/report plumbing, and the analytical mirror."""
+import numpy as np
+import pytest
+
+from repro.core.hw import snake_system
+from repro.core.noc import page_gather
+from repro.core.placement import (COMMUNAL, GatherCost, PlacementMap,
+                                  default_system, gather_cost)
+from repro.models import registry
+from repro.serving.engine import EngineConfig, make_engine
+from repro.serving.paged_cache import PageAllocator, PagedCache
+from repro.serving.scheduler import make_grouped_prefix_trace
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAS_HYPOTHESIS, reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+
+SYS = snake_system()
+
+
+# ---------------------------------------------------------------------------
+# PlacementMap geometry
+# ---------------------------------------------------------------------------
+def test_map_partitions_every_page_once():
+    pm = PlacementMap(48, 4, communal_pages=8)
+    seen = []
+    for r in pm.regions():
+        seen.extend(pm.region_pages(r))
+    assert sorted(seen) == list(range(48))
+    for r in pm.regions():
+        assert all(pm.region_of(p) == r for p in pm.region_pages(r))
+
+
+def test_map_uneven_split_front_loads_remainder():
+    pm = PlacementMap(10, 3, communal_pages=0)
+    assert [pm.region_size(r) for r in range(3)] == [4, 3, 3]
+
+
+def test_map_from_system_caps_regions():
+    pm = PlacementMap.from_system(SYS, 8)
+    assert pm.n_regions == 8            # 16 PUs capped by 8 pages
+    pm = PlacementMap.from_system(SYS, 64, communal_frac=0.25)
+    assert pm.n_regions == SYS.pus and pm.communal_pages == 16
+    with pytest.raises(ValueError):
+        PlacementMap(8, 9)
+    with pytest.raises(ValueError):
+        PlacementMap(8, 1, communal_pages=8)
+
+
+# ---------------------------------------------------------------------------
+# Placement-policy allocation
+# ---------------------------------------------------------------------------
+def _map48():
+    return PlacementMap(48, 4, communal_pages=8)
+
+
+def test_affinity_colocates_and_spills():
+    pm = _map48()
+    a = PageAllocator(48, placement=pm, policy="affinity")
+    got = a.alloc(5, home=2)
+    assert all(pm.region_of(p) == 2 for p in got)
+    # home (10 pages) runs dry -> spill covers the rest, never fails
+    more = a.alloc(8, home=2)
+    assert sum(pm.region_of(p) == 2 for p in more) == 5
+    assert all(pm.region_of(p) != COMMUNAL for p in more)
+
+
+def test_communal_routing_prefers_communal_region():
+    pm = _map48()
+    a = PageAllocator(48, placement=pm, policy="affinity")
+    got = a.alloc(5, home=1, communal=3)
+    assert sum(pm.region_of(p) == COMMUNAL for p in got) == 3
+    assert sum(pm.region_of(p) == 1 for p in got) == 2
+
+
+def test_interleave_stripes_across_regions():
+    pm = _map48()
+    a = PageAllocator(48, placement=pm, policy="interleave")
+    got = a.alloc(8)
+    per = {r: sum(pm.region_of(p) == r for p in got) for r in range(4)}
+    assert per == {0: 2, 1: 2, 2: 2, 3: 2}
+
+
+def test_free_first_policy_keeps_legacy_layout():
+    pm = _map48()
+    a = PageAllocator(48, placement=pm, policy="free-first")
+    b = PageAllocator(48)
+    assert a.alloc(5, home=3) == b.alloc(5)
+
+
+def test_placed_alloc_is_atomic_and_conserving():
+    pm = PlacementMap(12, 3, communal_pages=0)
+    a = PageAllocator(12, placement=pm, policy="affinity")
+    held = a.alloc(10, home=0)
+    before = (a.free_pages, a.used_pages)
+    assert a.alloc(3, home=1) is None      # only 2 free
+    assert (a.free_pages, a.used_pages) == before
+    a.free(held)
+    assert a.free_pages == 12
+
+
+def test_region_accounting():
+    pm = _map48()
+    a = PageAllocator(48, placement=pm, policy="affinity")
+    a.alloc(4, home=0)
+    a.alloc(2, communal=2)
+    used, free = a.region_used(), a.region_free()
+    assert used[0] == 4 and used[COMMUNAL] == 2
+    assert free[0] == pm.region_size(0) - 4
+    assert sum(free.values()) + sum(used.values()) == 48
+
+
+# ---------------------------------------------------------------------------
+# Gather cost model
+# ---------------------------------------------------------------------------
+def test_gather_cost_local_beats_mixed_beats_striped():
+    bpp = 4096
+    local = gather_cost(SYS, {1: 8}, bpp)
+    mixed = gather_cost(SYS, {1: 6, 2: 2}, bpp)
+    striped = gather_cost(SYS, {0: 2, 1: 2, 2: 2, 3: 2}, bpp)
+    assert local.time_s < mixed.time_s < striped.time_s
+    assert local.concentration == 1.0 and local.remote_regions == 0
+    assert mixed.home == 1 and mixed.concentration == 0.75
+    assert striped.remote_regions == 3
+
+
+def test_gather_cost_empty_table():
+    gc = gather_cost(SYS, {}, 4096)
+    assert gc.time_s == 0.0 and gc.concentration == 1.0
+
+
+def test_page_gather_charges_injection_port_and_hops():
+    a = page_gather(SYS, 1024, 0, 0)
+    b = page_gather(SYS, 0, 1024, 1)
+    # channel-internal bandwidth beats the NoC injection port
+    assert a.time_s < b.time_s
+    assert b.time_s >= SYS.noc_latency_cycles / SYS.freq_hz
+    with pytest.raises(ValueError):
+        page_gather(SYS, -1, 0, 0)
+
+
+# ---------------------------------------------------------------------------
+# Region-preserving defrag
+# ---------------------------------------------------------------------------
+def _cache(policy="affinity", share=False, num_pages=24, n_regions=3,
+           communal=6):
+    entry = registry.get("yi-6b", reduced=True)
+    pm = PlacementMap(num_pages, n_regions,
+                      communal_pages=communal if share else 0)
+    return PagedCache(entry, max_batch=4, max_seq=32, page_size=4,
+                      num_pages=num_pages, share=share, placement=pm,
+                      placement_policy=policy)
+
+
+def test_defrag_preserves_regions_and_refcounts():
+    pc = _cache()
+    for slot in range(4):
+        assert pc.alloc_slot(slot, 12)
+    pc.free_slot(1)
+    pc.free_slot(2)
+    before = {p: pc.alloc.refcount(p) for p in pc.alloc.live_pages()}
+    regions_before = {p: pc.placement.region_of(p) for p in before}
+    mapping = pc.defrag()
+    after = {p: pc.alloc.refcount(p) for p in pc.alloc.live_pages()}
+    # refcount multiset carried through the renumbering
+    assert after == {mapping[p]: rc for p, rc in before.items()}
+    for old, new in mapping.items():
+        assert pc.placement.region_of(old) == pc.placement.region_of(new)
+    # every region's live pages are compact at its lowest indices
+    for r in pc.placement.regions():
+        live_r = [p for p in pc.alloc.live_pages()
+                  if pc.placement.region_of(p) == r]
+        assert live_r == list(pc.placement.region_pages(r))[:len(live_r)]
+    assert regions_before  # sanity: the scenario had live pages
+
+
+def test_defrag_trie_renumbering_consistent_under_regions():
+    """Regression (region-constrained compaction targets): a trie hit
+    after defrag must map onto pages the allocator still considers live,
+    in their original regions — stale trie pages would hand a new
+    request another slot's storage."""
+    pc = _cache(share=True)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, 100, size=10).astype(np.int32)
+    assert pc.alloc_slot(0, 11, tokens=prompt)
+    pc.commit_prefix(0)
+    other = rng.integers(100, 200, size=12).astype(np.int32)
+    assert pc.alloc_slot(1, 13, tokens=other)
+    pc.commit_prefix(1)
+    pc.free_slot(1)                      # holes below the high-water mark
+    hit_before = pc.prefix.match(prompt, pc.page_size)
+    assert hit_before
+    mapping = pc.defrag()
+    hit_after = pc.prefix.match(prompt, pc.page_size)
+    assert hit_after == [mapping.get(p, p) for p in hit_before]
+    for p in hit_after:
+        assert pc.alloc.refcount(p) > 0
+        assert p in pc.blocks_of(0)
+
+
+@needs_hypothesis
+@settings(max_examples=50, deadline=None) if HAS_HYPOTHESIS else (lambda f: f)
+@given(st.lists(st.tuples(st.booleans(), st.integers(0, 3)), min_size=1,
+                max_size=30),
+       st.sampled_from(["free-first", "interleave", "affinity"])) \
+    if HAS_HYPOTHESIS else (lambda f: f)
+def test_defrag_region_property(ops, policy):
+    """Any alloc/free interleaving followed by defrag keeps every live
+    page in its original region with its refcount unchanged."""
+    pm = PlacementMap(18, 3, communal_pages=3)
+    a = PageAllocator(18, placement=pm, policy=policy)
+    held = []
+    for i, (is_alloc, n) in enumerate(ops):
+        if is_alloc:
+            got = a.alloc(n, home=i % 3, communal=n % 2)
+            if got is not None:
+                held.append(got)
+        elif held:
+            a.free(held.pop())
+    live = {p: a.refcount(p) for p in a.live_pages()}
+    # region-preserving renumbering through the public rebuild API
+    mapping = {}
+    for r in pm.regions():
+        live_r = [p for p in sorted(live) if pm.region_of(p) == r]
+        mapping.update(zip(live_r, pm.region_pages(r)))
+    a.rebuild({mapping[p]: rc for p, rc in live.items()})
+    assert {pm.region_of(p) for p in live} \
+        == {pm.region_of(mapping[p]) for p in live}
+    for p, rc in live.items():
+        assert pm.region_of(mapping[p]) == pm.region_of(p)
+        assert a.refcount(mapping[p]) == rc
+    assert a.free_pages + a.used_pages == 18
+
+
+# ---------------------------------------------------------------------------
+# Engine integration + analytical mirror
+# ---------------------------------------------------------------------------
+def _trace(entry, n=6):
+    return make_grouped_prefix_trace(
+        entry.config.vocab, rate_req_s=100.0, n_requests=n, n_groups=2,
+        prefix_len=8, tail_len=4, skew=0.8, seed=0)
+
+
+@pytest.mark.parametrize("policy", ["free-first", "interleave", "affinity"])
+def test_engine_placement_token_exact_and_reported(policy):
+    entry = registry.get("yi-6b", reduced=True)
+    base = make_engine(entry, EngineConfig(
+        max_batch=3, max_seq=32, max_new_tokens=6, paged=True,
+        page_size=4, prefix_sharing=True))
+    base.run_trace(_trace(entry))
+    want = {r.rid: r.tokens_out for r in base.completed}
+    eng = make_engine(entry, EngineConfig(
+        max_batch=3, max_seq=32, max_new_tokens=6, paged=True,
+        page_size=4, prefix_sharing=True, placement=policy,
+        placement_regions=4))
+    m = eng.run_trace(_trace(entry))
+    assert {r.rid: r.tokens_out for r in eng.completed} == want
+    assert m["placement_policy"] == policy
+    assert m["kv_gather_cost_mean_s"] > 0.0
+    assert 0.0 < m["kv_gather_concentration"] <= 1.0
+    rep = eng.load_report()
+    assert rep["min_region_free"] == min(rep["region_free"])
+
+
+def test_engine_without_placement_reports_none():
+    entry = registry.get("yi-6b", reduced=True)
+    eng = make_engine(entry, EngineConfig(
+        max_batch=3, max_seq=32, max_new_tokens=4, paged=True,
+        page_size=4))
+    m = eng.run_trace(_trace(entry, n=3))
+    assert m["placement_policy"] == "none"
+    assert m["kv_gather_cost_mean_s"] == 0.0
+    assert "region_free" not in eng.load_report()
+
+
+def test_sim_placement_scores_policies_without_changing_schedule():
+    from repro.core.operators import PAPER_MODELS
+    from repro.core.serving_sim import nmp_latency_model, simulate_serving
+    spec = PAPER_MODELS["LLaMA3-70B"]
+    lat = nmp_latency_model(SYS, spec, tp=8)
+    reports = {}
+    for policy in ("free-first", "interleave", "affinity"):
+        reports[policy] = simulate_serving(
+            lat, spec, 0.5, system="SNAKE", n_requests=12,
+            cache_mode="paged", prefix_sharing=True,
+            shared_prefix_len=1024, page_size=64, num_pages=1600,
+            placement=policy, n_regions=8, hw=SYS)
+    e2e = {rep.e2e_mean_s for rep in reports.values()}
+    assert len(e2e) == 1                 # placement never changes latency
+    aff, ff = reports["affinity"], reports["free-first"]
+    assert aff.gather_cost_mean_s < ff.gather_cost_mean_s
+    assert aff.gather_concentration > reports["interleave"] \
+        .gather_concentration
+    assert sum(rep.region_peak_pages[0] > 0 for rep in reports.values())
+
+
+def test_sim_placement_requires_paged():
+    from repro.core.operators import PAPER_MODELS
+    from repro.core.serving_sim import nmp_latency_model, simulate_serving
+    spec = PAPER_MODELS["LLaMA3-70B"]
+    lat = nmp_latency_model(SYS, spec, tp=8)
+    with pytest.raises(ValueError):
+        simulate_serving(lat, spec, 0.5, system="SNAKE", n_requests=4,
+                         cache_mode="dense", placement="affinity")
+    with pytest.raises(ValueError):
+        simulate_serving(lat, spec, 0.5, system="SNAKE", n_requests=4,
+                         cache_mode="paged", placement="bogus")
+
+
+def test_default_system_is_snake():
+    assert default_system().name == "SNAKE"
+    assert isinstance(gather_cost(default_system(), {0: 1}, 1), GatherCost)
