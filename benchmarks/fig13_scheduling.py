@@ -23,20 +23,24 @@ from repro.core.schedule import Mode
 
 BATCHES = (8, 16, 32, 64)
 CTXS = (4096, 8192, 16384)
+SMOKE_BATCHES = (8, 64)      # sweep corners only — same qualitative shape
+SMOKE_CTXS = (4096, 16384)
 TP = 8
 MODES = ("IS-S", "IS-ST", "OS-S", "OS-ST")
 
 
-def run() -> List[Row]:
+def run(smoke: bool = False) -> List[Row]:
     rows: List[Row] = []
     sys = snake_system()
+    batches = SMOKE_BATCHES if smoke else BATCHES
+    ctxs = SMOKE_CTXS if smoke else CTXS
     for model in ("LLaMA3-70B", "Qwen3-30B-A3B"):
         spec = PAPER_MODELS[model]
         hist: Dict[str, int] = {m: 0 for m in MODES}
         worst_slow = 1.0
         best_fixed_slow = None
-        for b in BATCHES:
-            for ctx in CTXS:
+        for b in batches:
+            for ctx in ctxs:
                 rep = decode_step(sys, spec, b, ctx, tp=TP)
                 for ex in rep.op_execs:
                     if ex.mode in hist:

@@ -24,7 +24,7 @@ TP = 8
 CTX = 8192 + 512
 
 
-def run() -> List[Row]:
+def run(smoke: bool = False) -> List[Row]:
     rows: List[Row] = []
     sys = snake_system()
 
@@ -32,7 +32,7 @@ def run() -> List[Row]:
     for model in ("LLaMA3-70B", "Qwen3-30B-A3B"):
         spec = PAPER_MODELS[model]
         hist: Dict[tuple, int] = {}
-        for b in (8, 16, 32, 64):
+        for b in ((8, 64) if smoke else (8, 16, 32, 64)):
             rep = decode_step(sys, spec, b, CTX, tp=TP)
             for ex in rep.op_execs:
                 if ex.core is not None:

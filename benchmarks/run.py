@@ -36,6 +36,7 @@ MODULES = [
     "serving_shared",      # refcounted prefix sharing on shared-prompt traces
     "serving_router",      # multi-replica routing policies (prefix affinity)
     "serving_placement",   # stack-aware page placement (gather-cost sweep)
+    "serving_codesign",    # per-tick shape/dataflow co-design vs fixed SAs
 ]
 
 

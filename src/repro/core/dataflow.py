@@ -179,3 +179,13 @@ def mactree_gemm(g: Gemm, mt: MacTreeConfig) -> CoreExec:
     util = (g.m * g.n * g.k) / (cycles * mt.pes)
     return CoreExec(cycles, 0, dram, sram, tm * tn, util,
                     Dataflow.OS, (mt.m, mt.n))
+
+
+def mean_utilization(cores) -> float:
+    """Array-cycle-weighted mean MAC utilization over a step's per-core
+    executions (the live co-design loop's per-tick occupancy signal).
+    0.0 when nothing ran on an array."""
+    total = sum(c.array_cycles for c in cores)
+    if total == 0:
+        return 0.0
+    return sum(c.util * c.array_cycles for c in cores) / total

@@ -481,3 +481,26 @@ def schedule_chain(sys: NMPSystem, ops: Sequence[Gemm]) -> List[OpExec]:
     schedule.reverse()
     del end
     return schedule
+
+
+# ---------------------------------------------------------------------------
+# Substrate-configuration fingerprints (live co-design loop)
+# ---------------------------------------------------------------------------
+def exec_config(execs: Sequence[OpExec]) -> tuple:
+    """Hashable substrate-configuration fingerprint of a scheduled step:
+    per operator, the partitioning mode and the logical array shape it
+    ran on.  Two steps with equal fingerprints drive an identically
+    configured substrate, which is what the serving tick memoizes on."""
+    return tuple(
+        (ex.mode,
+         tuple(ex.core.logical_shape) if ex.core is not None else ())
+        for ex in execs)
+
+
+def shape_profile(execs: Sequence[OpExec]) -> tuple:
+    """The distinct logical array shapes a scheduled step uses, sorted.
+    A serving tick pays a substrate reconfiguration only when this
+    profile changes between consecutive ticks — a fixed-shape array has a
+    single legal shape, so its profile never changes."""
+    return tuple(sorted({tuple(ex.core.logical_shape) for ex in execs
+                         if ex.core is not None}))

@@ -14,6 +14,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.dataflow import mean_utilization
 from repro.core.gemm import ceil_div
 from repro.core.gpu_model import gpu_decode_step
 from repro.core.hw import H100, GPUConfig, NMPSystem
@@ -22,6 +23,7 @@ from repro.core.pipeline import decode_step
 from repro.core.placement import (COMMUNAL, PLACEMENT_POLICIES,
                                   default_system, gather_cost,
                                   kv_bytes_per_token)
+from repro.core.schedule import exec_config, shape_profile
 
 
 @dataclass
@@ -69,6 +71,13 @@ class ServingReport:
     gather_cost_mean_s: float = 0.0  # mean per-slot block-table DMA cost
     gather_concentration: float = 1.0  # mean majority-channel page share
     region_peak_pages: Tuple[int, ...] = ()  # peak occupancy per region
+    # live co-design metrics (TickLatencyModel callers only)
+    reconfigurations: int = 0       # cross-tick shape-profile changes
+    substrate_configs: int = 0      # distinct per-op configurations seen
+    array_util_mean: float = 0.0    # mean per-tick MAC utilization
+    makespan_s: float = 0.0         # modeled clock when the last request ends
+    decoded_tokens: int = 0
+    tokens_per_s: float = 0.0       # decoded_tokens / makespan_s
 
     def normalized_to(self, base: "ServingReport") -> Tuple[float, float]:
         return (self.e2e_mean_s / base.e2e_mean_s,
@@ -109,6 +118,120 @@ def nmp_latency_model(sys: NMPSystem, spec: ModelSpec,
 def gpu_latency_model(spec: ModelSpec, tp: int = 8) -> DecodeLatencyModel:
     return DecodeLatencyModel(
         lambda b, c: gpu_decode_step(spec, b, c, tp=tp).time_s)
+
+
+# ---------------------------------------------------------------------------
+# Live microarchitecture-scheduling co-design (composition-keyed ticks)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class TickDecision:
+    """One serving tick's substrate decision: the per-operator array
+    shape + dataflow configuration the §5 scheduler picked for the tick's
+    actual batch composition, and the resulting modeled latency."""
+
+    time_s: float                  # decode_s + prefill_s
+    decode_s: float                # decode half of the tick
+    prefill_s: float               # co-scheduled prefill-chunk half
+    config: tuple                  # exec_config fingerprint (per-op)
+    shapes: tuple                  # distinct logical shapes used
+    util: float                    # cycle-weighted MAC utilization
+
+
+class TickLatencyModel:
+    """Composition-keyed per-tick latency model — the live co-design loop.
+
+    Where :class:`DecodeLatencyModel` caches a shape-blind
+    ``(batch, ctx-bucket)`` scalar, this model reruns the full §5
+    scheduling search (``mode_candidates`` / ``best_logical_shape``
+    through :func:`~repro.core.pipeline.decode_step`) for the tick's
+    actual composition — decode batch size, per-slot context lengths, a
+    co-scheduled chunked-prefill span, and the MoE expert fan-out carried
+    by ``spec`` — and returns the chosen substrate configuration together
+    with its latency.  Results are memoized on a *reduced shape
+    signature* (batch, bucketed mean context, bucketed prefill span) so
+    the serving hot path stays O(1) per tick after warm-up.
+
+    Reconfiguration accounting: a tick pays a reconfiguration when its
+    :func:`~repro.core.schedule.shape_profile` differs from the previous
+    tick's on the same ``stream`` (one stream per engine/replica).  A
+    non-reconfigurable substrate has a single legal shape, so its count
+    stays 0 by construction — the benchmark's fixed-shape baselines.
+
+    Drop-in compatible with :class:`DecodeLatencyModel` call sites via
+    ``__call__(batch, ctx)``; co-design-aware callers use :meth:`step`.
+    """
+
+    def __init__(self, sys: NMPSystem, spec: ModelSpec, tp: int = 1,
+                 ctx_bucket: int = 256, prefill_bucket: int = 32):
+        self.sys = sys
+        self.spec = spec
+        self.tp = tp
+        self.ctx_bucket = ctx_bucket
+        self.prefill_bucket = prefill_bucket
+        self._cache: Dict[tuple, TickDecision] = {}
+        self._last_shapes: Dict[object, tuple] = {}
+        self.reconfigurations = 0
+        self.configs_seen: set = set()
+
+    @staticmethod
+    def _bucket(v: int, b: int) -> int:
+        return max(b, ((v + b - 1) // b) * b) if v > 0 else 0
+
+    def signature(self, batch: int, ctxs: Optional[List[int]],
+                  prefill_tokens: int, prefill_ctx: int) -> tuple:
+        """The reduced shape signature a tick memoizes on."""
+        ctx = (int(np.mean(ctxs)) if ctxs else 0) if batch else 0
+        return (batch, self._bucket(ctx, self.ctx_bucket),
+                self._bucket(prefill_tokens, self.prefill_bucket),
+                self._bucket(prefill_ctx, self.ctx_bucket))
+
+    def _evaluate(self, sig: tuple) -> TickDecision:
+        batch, ctx_b, pf_b, pfctx_b = sig
+        execs = []
+        decode_s = prefill_s = 0.0
+        if batch > 0:
+            rep = decode_step(self.sys, self.spec, batch, ctx_b,
+                              tp=self.tp)
+            decode_s = rep.time_s
+            execs.extend(rep.op_execs)
+        if pf_b > 0:
+            # a prefill chunk of c tokens is a step with M = c rows
+            # attending the chunk-end context; the lm_head is skipped
+            # (only the final chunk's last token samples)
+            rep = decode_step(self.sys, self.spec, pf_b,
+                              max(pfctx_b, pf_b), include_head=False,
+                              tp=self.tp)
+            prefill_s = rep.time_s
+            execs.extend(rep.op_execs)
+        return TickDecision(
+            time_s=decode_s + prefill_s, decode_s=decode_s,
+            prefill_s=prefill_s, config=exec_config(execs),
+            shapes=shape_profile(execs),
+            util=mean_utilization([e.core for e in execs
+                                   if e.core is not None]))
+
+    def step(self, batch: int, ctxs: Optional[List[int]] = None,
+             prefill_tokens: int = 0, prefill_ctx: int = 0,
+             stream: object = 0) -> TickDecision:
+        """Price one serving tick and record its substrate configuration."""
+        sig = self.signature(batch, ctxs, prefill_tokens, prefill_ctx)
+        d = self._cache.get(sig)
+        if d is None:
+            d = self._cache[sig] = self._evaluate(sig)
+        last = self._last_shapes.get(stream)
+        if last is not None and last != d.shapes:
+            self.reconfigurations += 1
+        self._last_shapes[stream] = d.shapes
+        self.configs_seen.add(d.config)
+        return d
+
+    def __call__(self, batch: int, ctx: int) -> float:
+        return self.step(batch, [ctx] * max(1, batch)).time_s
+
+
+def nmp_tick_model(sys: NMPSystem, spec: ModelSpec, tp: int = 1,
+                   ctx_bucket: int = 256) -> TickLatencyModel:
+    return TickLatencyModel(sys, spec, tp=tp, ctx_bucket=ctx_bucket)
 
 
 def _pages(n_tokens: int, page_size: int) -> int:
@@ -283,6 +406,14 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
     max_stall = 0.0
     preemptions = 0
     dedup_peak = 1.0
+    # live co-design: a TickLatencyModel prices each tick from its actual
+    # composition (per-request contexts + the co-scheduled prefill chunk)
+    # instead of the shape-blind (batch, ctx-bucket) scalar
+    tick_step = getattr(latency, "step", None)
+    tick_stream = object()          # fresh reconfig stream per run
+    reconfigs0 = getattr(latency, "reconfigurations", 0)
+    tick_util_sum = 0.0
+    tick_iters = 0
 
     def admit_pages(r: Request) -> bool:
         nonlocal free_pages, prefix_refs
@@ -345,15 +476,31 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
         decoding = [r for r in active if r.prefill_remaining == 0]
         # --- co-scheduled on-device prefill ---------------------------------
         stall = 0.0
+        step_toks = 0
         pf = next((r for r in active if r.prefill_remaining > 0), None)
         if pf is not None:
             step_toks = (pf.prefill_remaining if prefill_chunk is None
                          else min(prefill_chunk, pf.prefill_remaining))
-            stall = _prefill_time(spec, step_toks, n_gpus=1)
+        if tick_step is not None:
+            # co-design: one scheduling decision for the whole tick —
+            # the prefill chunk is priced on the decode substrate too
+            dec = tick_step(len(decoding), [r.ctx() for r in decoding],
+                            prefill_tokens=step_toks,
+                            prefill_ctx=(pf.input_len
+                                         - pf.prefill_remaining
+                                         + step_toks) if pf else 0,
+                            stream=tick_stream)
+            it, stall = dec.decode_s, dec.prefill_s
+            tick_util_sum += dec.util
+            tick_iters += 1
+        else:
+            if pf is not None:
+                stall = _prefill_time(spec, step_toks, n_gpus=1)
+            it = (latency(len(decoding),
+                          int(np.mean([r.ctx() for r in decoding])))
+                  if decoding else 0.0)
+        if pf is not None:
             pf.prefill_remaining -= step_toks
-        it = (latency(len(decoding),
-                      int(np.mean([r.ctx() for r in decoding])))
-              if decoding else 0.0)
         clock += it + stall
         if decoding:                # stall only counts against hot decode
             max_stall = max(max_stall, stall)
@@ -442,7 +589,18 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
                          gather_concentration=(conc_sum / gather_iters
                                                if gather_iters else 1.0),
                          region_peak_pages=(tuple(region_peak)
-                                            if place else ()))
+                                            if place else ()),
+                         reconfigurations=(
+                             getattr(latency, "reconfigurations", 0)
+                             - reconfigs0),
+                         substrate_configs=len(
+                             getattr(latency, "configs_seen", ())),
+                         array_util_mean=(tick_util_sum / tick_iters
+                                          if tick_iters else 0.0),
+                         makespan_s=clock,
+                         decoded_tokens=sum(r.tokens_out for r in done),
+                         tokens_per_s=(sum(r.tokens_out for r in done)
+                                       / clock if clock > 0 else 0.0))
 
 
 # ---------------------------------------------------------------------------
@@ -466,6 +624,9 @@ class ClusterReport:
     per_replica_completed: List[int]
     dedup_ratio: float          # aggregate peak logical/physical pages
     preemptions: int
+    # live co-design metrics (TickLatencyModel callers only)
+    reconfigurations: int = 0   # cross-tick shape changes, all replicas
+    array_util_mean: float = 0.0  # mean per-tick MAC utilization
 
 
 def make_cluster_trace(rate_req_s: float, n_requests: int, input_len: int,
@@ -511,6 +672,10 @@ class _Replica:
         self.preemptions = 0
         self.logical_peak = 0
         self.physical_peak = 0
+        # live co-design: each replica is its own reconfiguration stream
+        self._tick_stream = object()
+        self.tick_util_sum = 0.0
+        self.tick_iters = 0
 
     # -- load signals read by the dispatch policy ----------------------
     def load(self) -> Tuple[int, int]:
@@ -586,8 +751,18 @@ class _Replica:
             self.active.append(self.queue.pop(0))
         if not self.active:
             return False
-        it = self.latency(len(self.active),
-                          int(np.mean([r.ctx() for r in self.active])))
+        tick_step = getattr(self.latency, "step", None)
+        if tick_step is not None:
+            dec = tick_step(len(self.active),
+                            [r.ctx() for r in self.active],
+                            stream=self._tick_stream)
+            it = dec.time_s
+            self.tick_util_sum += dec.util
+            self.tick_iters += 1
+        else:
+            it = self.latency(len(self.active),
+                              int(np.mean([r.ctx()
+                                           for r in self.active])))
         self.clock += it
         self.busy_s += it
         self._note_peaks()
@@ -686,6 +861,7 @@ def simulate_cluster(latency: DecodeLatencyModel, spec: ModelSpec,
         raise ValueError("shared_prefix_len exceeds a trace prompt")
     reps = [_Replica(latency, spec, max_batch, pages_cap, page_size,
                      shared_full) for _ in range(n_replicas)]
+    reconfigs0 = getattr(latency, "reconfigurations", 0)
 
     rr = 0
     sessions: Dict[int, int] = {}
@@ -745,4 +921,9 @@ def simulate_cluster(latency: DecodeLatencyModel, spec: ModelSpec,
         per_replica_util=[rep.busy_s / wall for rep in reps],
         per_replica_completed=[len(rep.done) for rep in reps],
         dedup_ratio=(logical / physical if physical else 1.0),
-        preemptions=sum(rep.preemptions for rep in reps))
+        preemptions=sum(rep.preemptions for rep in reps),
+        reconfigurations=(getattr(latency, "reconfigurations", 0)
+                          - reconfigs0),
+        array_util_mean=(sum(rep.tick_util_sum for rep in reps)
+                         / max(1, sum(rep.tick_iters for rep in reps))
+                         if any(rep.tick_iters for rep in reps) else 0.0))

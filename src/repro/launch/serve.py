@@ -17,6 +17,13 @@ tail) and watch the dedup ratio in the report.  ``--placement
 per-channel regions (``--placement-regions``) and reports the
 block-table gather cost against the SNAKE substrate.
 
+``--codesign`` turns on live array-shape/dataflow co-design pricing:
+every tick's actual composition (decode batch, per-slot contexts, the
+in-flight prefill chunk) is scheduled on the SNAKE substrate model and
+the report gains ``modeled_tokens_per_s`` / ``reconfigurations`` /
+``array_util_mean`` (``--codesign-rows R`` prices a fixed RxC array
+baseline instead).
+
 Multi-replica serving (PR 3): ``--replicas N`` stands up N engine
 replicas behind the front-end router and ``--router-policy`` picks the
 dispatch policy (``round_robin`` / ``least_loaded`` /
@@ -105,6 +112,16 @@ def main():
                          "--shared-prefix): the prefix-affinity workload")
     ap.add_argument("--group-skew", type=float, default=1.0,
                     help="Zipf popularity skew across groups")
+    ap.add_argument("--codesign", action="store_true",
+                    help="price every tick's batch composition on the "
+                         "SNAKE substrate model (live array-shape/"
+                         "dataflow co-design) and report the modeled "
+                         "throughput, reconfiguration count, and array "
+                         "utilization next to the wall-clock metrics")
+    ap.add_argument("--codesign-rows", type=int, default=None,
+                    choices=[8, 16, 32, 64],
+                    help="price a fixed rows x (4096/rows) array instead "
+                         "of the reconfigurable SNAKE substrate")
     ap.add_argument("--eos-rate", type=float, default=None,
                     help="per-step early-stop probability (samples "
                          "per-request decode budgets)")
@@ -121,6 +138,8 @@ def main():
     if args.placement and not args.paged:
         ap.error("--placement requires --paged (the dense cache has no "
                  "page pool to partition)")
+    if args.codesign_rows and not args.codesign:
+        ap.error("--codesign-rows requires --codesign")
 
     entry = registry.get(args.arch, reduced=not args.full)
     ecfg = EngineConfig(max_batch=args.max_batch,
@@ -135,7 +154,9 @@ def main():
                         defrag_threshold=(None if args.defrag_threshold < 0
                                           else args.defrag_threshold),
                         placement=args.placement,
-                        placement_regions=args.placement_regions)
+                        placement_regions=args.placement_regions,
+                        codesign=args.codesign,
+                        codesign_rows=args.codesign_rows)
     reqs = build_trace(args, entry.config.vocab)
     if args.replicas > 1:
         router = make_cluster(entry, ecfg, args.replicas,

@@ -97,6 +97,23 @@ class EngineConfig:
     # fraction of the pool carved off for shared prefix pages (placement
     # + prefix_sharing only)
     communal_frac: float = 0.25
+    # live microarchitecture-scheduling co-design (core/serving_sim.py
+    # TickLatencyModel): price every tick's actual operator mix on an NMP
+    # substrate model and report the chosen array shapes, reconfiguration
+    # count, and utilization alongside the wall-clock metrics.  The
+    # modeled clock is an accounting channel — scheduling stays
+    # wall-clock-driven, so decoded tokens are identical with it on/off.
+    codesign: bool = False
+    # price a fixed-shape substrate (rows x PEs/rows @ the same PE count
+    # as the reconfigurable default) instead — the benchmark's baselines
+    codesign_rows: Optional[int] = None
+    # price this ModelSpec instead of the engine's own (reduced test
+    # configs run tiny weights; pricing the full-size registry spec keeps
+    # the substrate comparison at deployment scale), and at this tensor-
+    # parallel width (the paper's stacks are tp=8 even when the reduced
+    # engine itself runs tp=1)
+    codesign_spec: Optional[object] = None
+    codesign_tp: Optional[int] = None
 
 
 def _insert_slot(cache, new, slot: int):
@@ -127,6 +144,7 @@ class ServingEngine:
         self.requeue: List[RequestState] = []   # preempted, awaiting re-admit
         self._prefilling: Optional[dict] = None   # chunk-scheduler state
         self._init_cache()
+        self._init_codesign()
 
         attn_fn = None
         if ecfg.use_pallas_decode and self.cfg.family in _ATTN_FAMILIES:
@@ -334,11 +352,68 @@ class ServingEngine:
         return (self._start_chunked(req) if self._chunkable()
                 else self.submit(req))
 
+    # -- live co-design (TickLatencyModel accounting channel) ----------
+    def _init_codesign(self) -> None:
+        self._tick_model = None
+        self.modeled_time_s = 0.0
+        self._tick_util_sum = 0.0
+        self._tick_steps = 0
+        if not self.ecfg.codesign:
+            return
+        from repro.core.hw import fixed_sa_system
+        from repro.core.placement import default_system
+        from repro.core.serving_sim import nmp_tick_model
+        hw = default_system()
+        if self.ecfg.codesign_rows:
+            sa = hw.substrate
+            pes = sa.phys_rows * sa.phys_cols
+            hw = fixed_sa_system(self.ecfg.codesign_rows,
+                                 pes // self.ecfg.codesign_rows)
+        self._codesign_hw = hw
+        spec = self.ecfg.codesign_spec or self.entry.config.nmp_spec()
+        self._tick_model = nmp_tick_model(
+            hw, spec, tp=self.ecfg.codesign_tp or self.tp)
+
+    def _note_tick(self, batch: int, ctxs: List[int], pf_tokens: int,
+                   pf_ctx: int) -> None:
+        """Price this tick's actual composition on the modeled substrate."""
+        if self._tick_model is None or not (batch or pf_tokens):
+            return
+        d = self._tick_model.step(batch, ctxs, prefill_tokens=pf_tokens,
+                                  prefill_ctx=pf_ctx)
+        self.modeled_time_s += d.time_s
+        self._tick_util_sum += d.util
+        self._tick_steps += 1
+
+    def codesign_report(self) -> dict:
+        """Substrate decisions accumulated over the run ({} when off)."""
+        if self._tick_model is None:
+            return {}
+        tm = self._tick_model
+        return {"substrate": self._codesign_hw.name,
+                "modeled_time_s": self.modeled_time_s,
+                "reconfigurations": tm.reconfigurations,
+                "substrate_configs": len(tm.configs_seen),
+                "array_util_mean": (self._tick_util_sum / self._tick_steps
+                                    if self._tick_steps else 0.0)}
+
     def tick(self) -> int:
         """Advance one iteration: at most one prefill chunk co-scheduled
         with one decode step.  Returns #finished requests."""
+        pf_tokens = pf_ctx = 0
         if self._chunkable():
+            st = self._prefilling
+            if st is not None and self._tick_model is not None:
+                pf_tokens = min(self.ecfg.prefill_chunk,
+                                len(st["req"].prompt) - st["pos"])
+                pf_ctx = st["pos"] + pf_tokens
             self._prefill_chunk_tick()
+        if self._tick_model is not None:
+            # composition of the decode step about to run (the chunk just
+            # ticked may have activated its request into this batch)
+            ctxs = [len(r.prompt) + len(r.tokens_out)
+                    for r in self.active.values()]
+            self._note_tick(len(ctxs), ctxs, pf_tokens, pf_ctx)
         return self.step()
 
     def busy(self) -> bool:
@@ -429,6 +504,9 @@ class PagedServingEngine(ServingEngine):
         self.pages_logical_peak = 0
         self.dedup_ratio_peak = 1.0
         self.defrag_runs = 0
+        # prompt tokens whose extend_step compute was skipped because the
+        # shared-prefix trie already held their KV (chunked prefill)
+        self.prefill_tokens_skipped = 0
         self._gather_cost_sum = 0.0
         self._gather_conc_sum = 0.0
         self._gather_cost_steps = 0
@@ -466,7 +544,9 @@ class PagedServingEngine(ServingEngine):
         if thr is None or not self.paged.has_seq:
             return
         if self.paged.fragmentation() > thr:
-            self.paged.defrag()
+            # defrag also runs the spilled-page home-migration repair
+            # pass (placed mode), priced on the engine's hardware model
+            self.paged.defrag(self._hw)
             self.defrag_runs += 1
 
     def _note_pages(self) -> None:
@@ -519,7 +599,20 @@ class PagedServingEngine(ServingEngine):
         slot = self._claim(req)     # reserves prompt pages, maps shared ones
         if slot is None:
             return False
-        self._prefilling = {"req": req, "slot": slot, "pos": 0,
+        # Shared-prefix compute skip: pages mapped from the trie already
+        # hold this prompt's leading KV, so extension starts at the
+        # shared-page boundary instead of recomputing resident chunks
+        # (their writes were being routed to the scratch page anyway —
+        # pure wasted compute).  At least the final prompt token is kept
+        # so the last chunk's logits still yield the first output token,
+        # which also covers the exact-tail case where the *whole* prompt
+        # is resident.
+        n = len(req.prompt)
+        resident = min(int(self.paged.shared_count[slot])
+                       * self.ecfg.page_size, n)
+        start = min(resident, n - 1)
+        self.prefill_tokens_skipped += start
+        self._prefilling = {"req": req, "slot": slot, "pos": start,
                             "t0": time.perf_counter(), "logits": None,
                             "direct": True}
         return True
@@ -572,7 +665,10 @@ class PagedServingEngine(ServingEngine):
                "used_tokens": used,
                "logical_peak_pages": self.pages_logical_peak,
                "dedup_ratio_peak": self.dedup_ratio_peak,
-               "defrag_runs": self.defrag_runs}
+               "defrag_runs": self.defrag_runs,
+               "prefill_skipped_tokens": self.prefill_tokens_skipped,
+               "migrated_pages": self.paged.migrated_pages,
+               "migration_cost_s": self.paged.migration_cost_s}
         rep.update(self.paged.sharing_report())
         if self.paged.placement is not None:
             steps = max(1, self._gather_cost_steps)

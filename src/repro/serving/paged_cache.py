@@ -47,8 +47,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.gemm import ceil_div
+from repro.core.noc import page_gather
 from repro.core.placement import (COMMUNAL, PLACEMENT_POLICIES, GatherCost,
-                                  PlacementMap, gather_cost)
+                                  PlacementMap, default_system, gather_cost)
 
 
 # ---------------------------------------------------------------------------
@@ -218,6 +219,22 @@ class PageAllocator:
         else:
             pages = self._select(n, home, communal)
             assert len(pages) == n
+        for p in pages:
+            self._refs[p] = 1
+        return pages
+
+    def alloc_in(self, region: int, n: int = 1) -> Optional[List[int]]:
+        """Allocate ``n`` pages strictly from ``region`` (placed mode
+        only) — the page-migration primitive: unlike :meth:`alloc` it
+        never spills, returning ``None`` when the region cannot satisfy
+        the request in full.  Atomic."""
+        assert self.placed, "alloc_in needs active placement"
+        pool = self._region_lists.get(region, [])
+        if n < 0:
+            raise ValueError("alloc size must be >= 0")
+        if len(pool) < n:
+            return None
+        pages = [pool.pop() for _ in range(n)]
         for p in pages:
             self._refs[p] = 1
         return pages
@@ -501,6 +518,9 @@ class PagedCache:
         self.shared_count = np.zeros((self.max_batch,), np.int64)
         self._pending_prompt: Dict[int, np.ndarray] = {}
         self.cow_forks = 0
+        # cross-region home migration (defrag's spilled-page repair pass)
+        self.migrated_pages = 0
+        self.migration_cost_s = 0.0
         self._bytes_per_page: Optional[int] = None
 
     # -- block-table bookkeeping -------------------------------------------
@@ -659,6 +679,8 @@ class PagedCache:
         if self.share:
             self.prefix = PrefixIndex()
         self.cow_forks = 0
+        self.migrated_pages = 0
+        self.migration_cost_s = 0.0
         self._invalidate()
 
     # -- copy-on-write -----------------------------------------------------
@@ -854,7 +876,54 @@ class PagedCache:
         self.prefix.register(tokens, self.blocks_of(slot)[:covered],
                              self.page_size)
 
-    def defrag(self) -> Dict[int, int]:
+    def migrate_spilled(self, sys=None) -> int:
+        """Move exclusively-owned pages that spilled out of their slot's
+        home region back home (placed mode only).
+
+        Under pressure ``alloc`` deliberately spills to a foreign region
+        rather than fail admission — but once the pool relaxes the slot
+        keeps paying the cross-region gather tax on every decode step,
+        forever.  This pass repairs that: each spilled page whose home
+        region has free capacity again is physically copied home through
+        the NoC, priced with :func:`~repro.core.noc.page_gather` and
+        accumulated into ``migrated_pages`` / ``migration_cost_s``.
+
+        Shared pages stay put — refcount > 1 means holders with
+        different homes read them — and trie-registered pages are
+        communal by design.  Returns the number of pages moved.
+        """
+        if not (self.has_seq and self.alloc.placed):
+            return 0
+        moved = 0
+        for slot, home in sorted(self.home_region.items()):
+            for blk in range(self.max_blocks):
+                page = int(self.tables[slot, blk])
+                if (page < 0 or self.alloc.refcount(page) != 1
+                        or self.placement.region_of(page) == home):
+                    continue
+                if self.prefix is not None \
+                        and page in self.prefix._by_page:
+                    continue
+                got = self.alloc.alloc_in(home, 1)
+                if got is None:
+                    break                    # home is full again
+                new = got[0]
+                self.store = [
+                    _copy_page(pool, page, new) if seq else pool
+                    for pool, seq in zip(self.store, self.is_seq)]
+                self.tables[slot, blk] = new
+                self.alloc.decref(page)
+                moved += 1
+        if moved:
+            cost = page_gather(
+                sys if sys is not None else default_system(),
+                0, moved * self.bytes_per_page(), moved)
+            self.migrated_pages += moved
+            self.migration_cost_s += cost.time_s
+            self._invalidate()
+        return moved
+
+    def defrag(self, sys=None) -> Dict[int, int]:
         """Compact live pages to the lowest indices.
 
         Returns the old->new mapping applied.  Pool data is permuted on
@@ -866,11 +935,18 @@ class PagedCache:
         region's live pages compact to that region's lowest indices and
         never migrate across regions (a cross-region move would be a
         physical DMA copy through the NoC — exactly the traffic placement
-        exists to avoid).  The prefix trie is renumbered through the same
-        constrained mapping, so a trie hit after defrag still points at a
-        live page in the original channel region; both invariants are
-        asserted below.
+        exists to avoid).  The one exception is deliberate and priced:
+        under an active placement policy a :meth:`migrate_spilled` repair
+        pass runs first, copying exclusively-owned spilled pages back to
+        their slot's home region through the NoC (charged via
+        ``page_gather``) so a slot squeezed during a pressure spike is
+        not fragmented across regions forever.  The prefix trie is
+        renumbered through the same constrained mapping, so a trie hit
+        after defrag still points at a live page in the original channel
+        region; both invariants are asserted below.
         """
+        if self.alloc.placed:
+            self.migrate_spilled(sys)
         live = self.alloc.live_pages()
         if self.placement is None:
             mapping = {old: new for new, old in enumerate(live)}

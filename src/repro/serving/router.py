@@ -148,10 +148,20 @@ class Router:
         per_replica = []
         all_done: List[RequestState] = []
         logical_peak = physical_peak = 0
+        reconfigs = 0
+        modeled_rate = 0.0
+        util_sum, util_n = 0.0, 0
         for i, (eng, sch) in enumerate(zip(self.engines,
                                            self.schedulers)):
             m = sch.metrics(wall, t0)
             kv = eng.kv_report()
+            # live co-design aggregates (replicas run in parallel, so
+            # the cluster's modeled rate is the sum of per-replica rates)
+            reconfigs += m.get("reconfigurations", 0)
+            modeled_rate += m.get("modeled_tokens_per_s", 0.0)
+            if m.get("modeled_time_s", 0.0) > 0:
+                util_sum += m.get("array_util_mean", 0.0)
+                util_n += 1
             page = getattr(getattr(eng, "ecfg", None), "page_size", 1)
             phys = kv["peak_tokens"] // max(1, page) \
                 if kv["mode"] == "paged" else 0
@@ -179,7 +189,7 @@ class Router:
             "wall_s": wall,
             "requests": len(all_done),
             "decoded_tokens": toks,
-            "tokens_per_s": toks / wall,
+            "tokens_per_s": toks / wall if wall > 0 else 0.0,
             "e2e_p50_s": float(np.percentile(e2e, 50)) if len(e2e) else 0.0,
             "e2e_p99_s": float(np.percentile(e2e, 99)) if len(e2e) else 0.0,
             "tbt_mean_s": float(np.mean(tbts)) if tbts else 0.0,
@@ -191,6 +201,10 @@ class Router:
                                  if r.finish_reason == "budget"),
             "dedup_ratio_agg": (logical_peak / physical_peak
                                 if physical_peak else 1.0),
+            # live co-design aggregates (0 when no replica runs codesign)
+            "reconfigurations": reconfigs,
+            "modeled_tokens_per_s": modeled_rate,
+            "array_util_mean": util_sum / util_n if util_n else 0.0,
             "per_replica": per_replica,
         }
 

@@ -47,7 +47,10 @@ class RequestState:
     tokens_out: List[int] = field(default_factory=list)
     token_times: List[float] = field(default_factory=list)
     finish_s: float = 0.0
-    first_token_s: float = 0.0
+    # wall-clock instant the first token was emitted; None until then (a
+    # plain 0.0 sentinel would drop a legitimate sample taken at exactly
+    # t=0 from the TTFT statistics)
+    first_token_s: Optional[float] = None
     preemptions: int = 0
     # eos-aware traces: per-request decode budget sampled at trace build
     # time (None: the engine's max_new_tokens applies); stopping at a
@@ -67,7 +70,7 @@ class RequestState:
         self.tokens_out = []
         self.token_times = []
         self.prefill_done_s = 0.0
-        self.first_token_s = 0.0
+        self.first_token_s = None
         self.finish_reason = ""
 
 
@@ -286,14 +289,17 @@ class Scheduler:
         for r in eng.completed:
             if len(r.token_times) > 1:
                 tbts.extend(np.diff(r.token_times))
-            if r.first_token_s > 0.0:
+            if r.first_token_s is not None:
                 ttfts.append(r.first_token_s - t0 - r.arrival_s)
         toks = sum(len(r.tokens_out) for r in eng.completed)
         reasons = [r.finish_reason for r in eng.completed]
         kv = eng.kv_report()
+        # live co-design channel ({} on engines without it, incl. stubs)
+        cd = getattr(eng, "codesign_report", dict)()
         return {"wall_s": wall, "requests": len(eng.completed),
                 "decoded_tokens": toks,
-                "tokens_per_s": toks / wall,
+                # an empty / all-preempted trace can complete at wall == 0
+                "tokens_per_s": toks / wall if wall > 0 else 0.0,
                 "tbt_mean_s": float(np.mean(tbts)) if tbts else 0.0,
                 "tbt_p99_s": float(np.percentile(tbts, 99)) if tbts else 0.0,
                 "ttft_mean_s": float(np.mean(ttfts)) if ttfts else 0.0,
@@ -309,9 +315,22 @@ class Scheduler:
                 "kv_dedup_ratio_peak": kv.get("dedup_ratio_peak", 1.0),
                 "cow_forks": kv.get("cow_forks", 0),
                 "defrag_runs": kv.get("defrag_runs", 0),
+                "prefill_skipped_tokens":
+                    kv.get("prefill_skipped_tokens", 0),
+                "kv_migrated_pages": kv.get("migrated_pages", 0),
+                "kv_migration_cost_s": kv.get("migration_cost_s", 0.0),
                 # stack-aware placement (engines with a placement map)
                 "placement_policy": kv.get("placement_policy", "none"),
                 "kv_gather_cost_mean_s": kv.get("gather_cost_mean_s", 0.0),
                 "kv_gather_concentration":
                     kv.get("gather_concentration_mean", 1.0),
-                "kv_region_peak": kv.get("region_peak", {})}
+                "kv_region_peak": kv.get("region_peak", {}),
+                # live co-design (EngineConfig.codesign engines)
+                "codesign_substrate": cd.get("substrate", "none"),
+                "modeled_time_s": cd.get("modeled_time_s", 0.0),
+                "modeled_tokens_per_s": (
+                    toks / cd["modeled_time_s"]
+                    if cd.get("modeled_time_s") else 0.0),
+                "reconfigurations": cd.get("reconfigurations", 0),
+                "substrate_configs": cd.get("substrate_configs", 0),
+                "array_util_mean": cd.get("array_util_mean", 0.0)}

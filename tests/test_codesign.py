@@ -1,0 +1,202 @@
+"""Live array-shape/dataflow co-design (PR 6).
+
+Covers the TickLatencyModel against the offline §5 scheduler, its
+memoization and reconfiguration accounting, the codesign-enabled engine
+(token exactness — the modeled clock is an accounting channel), and the
+shared-prefix chunked-prefill compute skip.
+"""
+import numpy as np
+import pytest
+
+from repro.core.hw import fixed_sa_system, snake_system
+from repro.core.pipeline import decode_step
+from repro.core.schedule import exec_config, shape_profile
+from repro.core.serving_sim import nmp_tick_model, simulate_serving
+from repro.models import registry
+from repro.serving.engine import (EngineConfig, make_engine,
+                                  make_shared_prefix_trace)
+from repro.serving.scheduler import make_trace
+
+SNAKE = snake_system()
+SPEC = registry.get_config("llama3-70b").nmp_spec()
+MOE_SPEC = registry.get_config("qwen3-30b-a3b").nmp_spec()
+
+
+# --- TickLatencyModel vs the offline scheduler -------------------------
+def test_tick_decision_matches_offline_schedule():
+    """A decode-only tick picks exactly the per-op (mode, shape)
+    configuration the offline scheduling search picks for the same
+    bucket-aligned composition."""
+    tm = nmp_tick_model(SNAKE, SPEC, tp=8)
+    d = tm.step(8, [4096] * 8)
+    rep = decode_step(SNAKE, SPEC, 8, 4096, tp=8)
+    assert d.config == exec_config(rep.op_execs)
+    assert d.shapes == shape_profile(rep.op_execs)
+    assert d.decode_s == pytest.approx(rep.time_s)
+    assert d.prefill_s == 0.0
+
+
+def test_tick_prefill_chunk_priced_without_head():
+    tm = nmp_tick_model(SNAKE, SPEC, tp=8)
+    d = tm.step(0, [], prefill_tokens=256, prefill_ctx=2048)
+    rep = decode_step(SNAKE, SPEC, 256, 2048, include_head=False, tp=8)
+    assert d.prefill_s == pytest.approx(rep.time_s)
+    assert d.decode_s == 0.0
+
+
+def test_tick_latency_monotone_in_ctx_and_batch():
+    """Modeled decode latency never decreases with context, and on a
+    FIXED substrate never decreases with batch.  (On the reconfigurable
+    substrate a larger batch may unlock a better array shape and tick
+    *faster* — that dip is the co-design effect, so the batch claim
+    there is the weaker per-token one: time per decoded token falls.)"""
+    tm = nmp_tick_model(SNAKE, SPEC, tp=8)
+    times = [tm.step(8, [c] * 8).decode_s for c in (2048, 4096, 8192)]
+    assert all(t1 >= t0 * 0.999 for t0, t1 in zip(times, times[1:]))
+    fixed = nmp_tick_model(fixed_sa_system(16, 256), SPEC, tp=8)
+    ftimes = [fixed.step(b, [4096] * b).decode_s for b in (4, 8, 16, 32)]
+    assert all(t1 >= t0 * 0.999 for t0, t1 in zip(ftimes, ftimes[1:]))
+    per_tok = [tm.step(b, [4096] * b).decode_s / b for b in (4, 8, 16, 32)]
+    assert all(t1 <= t0 * 1.001 for t0, t1 in zip(per_tok, per_tok[1:]))
+
+
+def test_tick_model_memoizes_on_shape_signature():
+    tm = nmp_tick_model(SNAKE, SPEC, tp=8)
+    d1 = tm.step(4, [1000, 1100, 900, 1024])
+    n_cached = len(tm._cache)
+    # same reduced signature (same batch, same mean-ctx bucket)
+    d2 = tm.step(4, [1010, 1090, 910, 1014])
+    assert len(tm._cache) == n_cached
+    assert d2 is d1
+
+
+def test_reconfiguration_accounting_per_stream():
+    """Shape-profile changes count per stream; a fixed-shape substrate
+    never reconfigures (single legal shape)."""
+    tm = nmp_tick_model(SNAKE, MOE_SPEC, tp=8)
+    profiles = set()
+    for batch, pf in ((1, 0), (32, 0), (1, 256), (64, 0)):
+        d = tm.step(batch, [2048] * batch, prefill_tokens=pf,
+                    prefill_ctx=2048, stream="a")
+        profiles.add(d.shapes)
+    assert len(profiles) > 1        # composition diversity forces changes
+    assert tm.reconfigurations > 0
+    # an independent stream replays the same decisions from cache and
+    # pays its own reconfigurations
+    before = tm.reconfigurations
+    tm.step(1, [2048], stream="b")
+    assert tm.reconfigurations == before
+    fixed = nmp_tick_model(fixed_sa_system(16, 256), MOE_SPEC, tp=8)
+    for batch, pf in ((1, 0), (32, 0), (1, 256), (64, 0)):
+        fixed.step(batch, [2048] * batch, prefill_tokens=pf,
+                   prefill_ctx=2048, stream="a")
+    assert fixed.reconfigurations == 0
+    assert len({s for s in fixed._last_shapes.values()}) == 1
+
+
+def test_tick_model_is_decode_latency_model_compatible():
+    tm = nmp_tick_model(SNAKE, SPEC, tp=8)
+    assert tm(8, 4096) == pytest.approx(tm.step(8, [4096] * 8).time_s)
+
+
+# --- simulate_serving mirror ------------------------------------------
+def test_simulate_serving_tick_model_drives_clock():
+    """The per-tick model is the serving clock in the mirror: decoded
+    tokens match the scalar-model run, throughput fields populate, and
+    only the reconfigurable substrate reports reconfigurations."""
+    kw = dict(rate_req_s=100.0, system="SNAKE", n_requests=4,
+              input_len=512, output_len=32, max_batch=4,
+              prefill_on_device=True, prefill_chunk=256)
+    tick = nmp_tick_model(SNAKE, SPEC, tp=8)
+    rep = simulate_serving(tick, SPEC, **kw)
+    assert rep.completed == 4
+    assert rep.decoded_tokens == 4 * 32
+    assert rep.makespan_s > 0 and rep.tokens_per_s > 0
+    assert rep.substrate_configs >= 1
+    assert 0.0 < rep.array_util_mean <= 1.0
+    fixed = nmp_tick_model(fixed_sa_system(16, 256), SPEC, tp=8)
+    rf = simulate_serving(fixed, SPEC, **kw)
+    assert rf.decoded_tokens == rep.decoded_tokens
+    assert rf.reconfigurations == 0
+
+
+# --- codesign engine (accounting channel) -----------------------------
+def _run_engine(entry, reqs, **over):
+    ecfg = EngineConfig(max_batch=2, max_seq=64, max_new_tokens=4,
+                        paged=True, page_size=8, prefill_chunk=16, **over)
+    eng = make_engine(entry, ecfg)
+    eng.run_trace(reqs)
+    return eng
+
+
+def test_codesign_engine_token_exact_and_reports():
+    """Turning co-design pricing on (reconfigurable or fixed substrate)
+    never changes decoded tokens, and the report chain threads through
+    Scheduler.metrics."""
+    entry = registry.get("yi-6b", reduced=True)
+    reqs = make_trace(entry.config.vocab, rate_req_s=500.0, n_requests=4,
+                      prompt_len=40, seed=3)
+
+    def toks(e):
+        return {r.rid: list(map(int, r.tokens_out)) for r in e.completed}
+
+    base = _run_engine(entry, reqs)
+    snake_eng = _run_engine(entry, reqs, codesign=True)
+    fixed_eng = _run_engine(entry, reqs, codesign=True, codesign_rows=16)
+    assert toks(base) == toks(snake_eng) == toks(fixed_eng)
+    assert base.codesign_report() == {}
+    cd = snake_eng.codesign_report()
+    assert cd["substrate"] == "SNAKE"
+    assert cd["modeled_time_s"] > 0
+    assert cd["substrate_configs"] >= 1
+    assert fixed_eng.codesign_report()["reconfigurations"] == 0
+
+    from repro.serving.scheduler import Scheduler
+    sch = Scheduler(snake_eng)
+    m = sch.metrics(1.0, 0.0)
+    assert m["codesign_substrate"] == "SNAKE"
+    assert m["modeled_time_s"] == pytest.approx(cd["modeled_time_s"])
+    assert m["modeled_tokens_per_s"] > 0
+
+
+def test_codesign_spec_and_tp_override():
+    """codesign_spec/codesign_tp price a full-size deployment while the
+    reduced engine runs tiny weights."""
+    entry = registry.get("yi-6b", reduced=True)
+    reqs = make_trace(entry.config.vocab, rate_req_s=500.0, n_requests=2,
+                      prompt_len=24, seed=0)
+    eng = _run_engine(entry, reqs, codesign=True, codesign_spec=SPEC,
+                      codesign_tp=8)
+    assert eng._tick_model.spec is SPEC
+    assert eng._tick_model.tp == 8
+    assert eng.codesign_report()["modeled_time_s"] > 0
+
+
+# --- shared-prefix chunked-prefill compute skip ------------------------
+def test_chunked_prefill_skips_resident_prefix_token_exact():
+    """With sharing + chunked prefill, later requests skip recomputing
+    resident full prefix pages — and still decode the exact tokens the
+    dense engine decodes."""
+    entry = registry.get("yi-6b", reduced=True)
+
+    def run(**over):
+        ecfg = EngineConfig(max_batch=3, max_seq=64, max_new_tokens=5,
+                            **over)
+        eng = make_engine(entry, ecfg)
+        reqs = make_shared_prefix_trace(
+            entry.config.vocab, rate_req_s=500.0, n_requests=5,
+            prefix_len=24, tail_len=6, seed=4)
+        eng.run_trace(reqs)
+        return eng
+
+    dense = run()
+    shared = run(paged=True, page_size=8, prefix_sharing=True,
+                 prefill_chunk=8)
+
+    def toks(e):
+        return {r.rid: list(map(int, r.tokens_out)) for r in e.completed}
+
+    assert toks(dense) == toks(shared)
+    assert shared.prefill_tokens_skipped > 0
+    assert shared.kv_report()["prefill_skipped_tokens"] \
+        == shared.prefill_tokens_skipped

@@ -3,6 +3,7 @@ placement-policy allocation (co-location / striping / spill), the
 gather DMA cost model, region-preserving defrag (deterministic +
 hypothesis property, plus the prefix-trie renumbering regression), the
 engine/report plumbing, and the analytical mirror."""
+import jax
 import numpy as np
 import pytest
 
@@ -206,6 +207,38 @@ def test_defrag_trie_renumbering_consistent_under_regions():
     for p in hit_after:
         assert pc.alloc.refcount(p) > 0
         assert p in pc.blocks_of(0)
+
+
+def test_defrag_migrates_spilled_pages_home():
+    """A slot whose growth pages spilled out of its home region under
+    pressure is repaired once the pool relaxes: defrag's migration pass
+    copies the spilled pages home (a NoC DMA priced via ``page_gather``)
+    and the slot's gather cost strictly decreases."""
+    pc = _cache()                            # affinity, 3 regions x 8
+    assert pc.alloc_slot(0, 8)               # 2 pages in its home region
+    home = pc.home_region[0]
+    for slot, n in ((1, 24), (2, 24), (3, 24)):
+        assert pc.alloc_slot(slot, n)
+    assert pc.alloc.region_free()[home] == 0   # slot 3 drained the home
+    assert pc.extend_slot(0, 24)             # growth is forced to spill
+    before = pc.gather_cost_slot(SYS, 0)
+    assert before.remote_regions > 0         # the spill really happened
+    # stamp slot 0's pages so migration provably moves the bytes
+    seq_i = pc.is_seq.index(True)
+    for k, page in enumerate(pc.blocks_of(0)):
+        pc.store[seq_i] = pc.store[seq_i].at[:, page].set(float(k + 1))
+    want = np.asarray(jax.tree.leaves(pc.gather())[seq_i][:, 0])
+    pc.free_slot(3)                          # pressure relaxes
+    pc.defrag(SYS)
+    after = pc.gather_cost_slot(SYS, 0)
+    assert pc.migrated_pages == 4 and pc.migration_cost_s > 0.0
+    assert after.time_s < before.time_s
+    assert after.remote_regions == 0 and after.concentration == 1.0
+    assert set(pc.slot_region_counts(0)) == {home}
+    # logical contents survived the copy + renumbering
+    got = np.asarray(jax.tree.leaves(pc.gather())[seq_i][:, 0])
+    np.testing.assert_array_equal(got, want)
+    assert all(pc.alloc.refcount(p) == 1 for p in pc.alloc.live_pages())
 
 
 @needs_hypothesis
