@@ -1,0 +1,103 @@
+"""Invariant checker suite (CI gate: ``python -m repro.analysis.checks``).
+
+Three static passes over the serving stack, each returning
+:class:`~repro.analysis.checks.common.Finding` records:
+
+* **kernel-aliasing** (:mod:`kernel_lint`) — traces Pallas kernels and
+  jitted scatter paths to their jaxprs and verifies bounds-guarded block
+  mappings, scratch routing for inactive/out-of-window lanes, and
+  guarded stores to revisited output blocks.
+* **allocator-model** (:mod:`allocator_model`) — exhaustive small-scope
+  exploration of ``PageAllocator``/``PrefixIndex`` op sequences with
+  minimal counterexample traces.
+* **mirror-drift** (:mod:`mirror_drift`) — AST diff of the live engine
+  against its analytic mirror (config knobs, metric keys, report
+  fields) driven by the explicit contract in :mod:`mirror_spec`.
+
+``run_fixture`` points a pass at a regression fixture re-introducing a
+historical bug; the CLI must exit non-zero on every one of them.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Callable, List, Optional, Sequence
+
+from .common import Finding, render_report  # noqa: F401  (CLI re-export)
+
+PASS_NAMES = ("kernel-aliasing", "allocator-model", "mirror-drift")
+
+_FIXDIR = Path(__file__).resolve().parent / "fixtures"
+
+
+def run_pass(name: str,
+             log: Optional[Callable[[str], None]] = None) -> List[Finding]:
+    if name == "kernel-aliasing":
+        from . import kernel_lint
+        return kernel_lint.run()
+    if name == "allocator-model":
+        from . import allocator_model
+        return allocator_model.run(log=log)
+    if name == "mirror-drift":
+        from . import mirror_drift
+        return mirror_drift.run()
+    raise ValueError(f"unknown pass {name!r} (know {PASS_NAMES})")
+
+
+def run_all(passes: Optional[Sequence[str]] = None,
+            log: Optional[Callable[[str], None]] = None) -> List[Finding]:
+    findings: List[Finding] = []
+    for name in passes or PASS_NAMES:
+        findings += run_pass(name, log=log)
+    return findings
+
+
+# --- regression fixtures (seeded historical bugs) -------------------------
+def _fx_scatter_clip(log=None) -> List[Finding]:
+    from . import kernel_lint
+    from .fixtures import pr2_scatter_clip as fx
+    return kernel_lint.lint_scatter_token(fx.scatter_token_clipped)
+
+
+def _fx_inactive_lane(log=None) -> List[Finding]:
+    from . import kernel_lint
+    return kernel_lint.check_inactive_lane_ast(
+        path=str(_FIXDIR / "pr2_inactive_lane.py"))
+
+
+def _fx_refcount_free(log=None) -> List[Finding]:
+    from . import allocator_model as am
+    from .fixtures import pr2_refcount_free as fx
+    findings = am.explore(am.ModelConfig(num_pages=4, depth=4,
+                                         placed=False),
+                          allocator_cls=fx.RefcountIgnoringAllocator,
+                          log=log)
+    findings += am.explore(am.ModelConfig(depth=3),
+                           defrag_mapping=fx.cross_region_defrag_mapping,
+                           log=log)
+    return findings
+
+
+def _fx_metrics_drift(log=None) -> List[Finding]:
+    from . import mirror_drift
+    return mirror_drift.check_router_aggregation(
+        router_path=str(_FIXDIR / "pr6_metrics_drift.py"))
+
+
+FIXTURES = {
+    "pr2-scatter-clip": _fx_scatter_clip,
+    "pr2-inactive-lane": _fx_inactive_lane,
+    "pr2-refcount-free": _fx_refcount_free,
+    "pr6-metrics-drift": _fx_metrics_drift,
+}
+FIXTURE_NAMES = tuple(sorted(FIXTURES))
+
+
+def run_fixture(name: str,
+                log: Optional[Callable[[str], None]] = None
+                ) -> List[Finding]:
+    try:
+        fn = FIXTURES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown fixture {name!r} (know {FIXTURE_NAMES})") from None
+    return fn(log=log)

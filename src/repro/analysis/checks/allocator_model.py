@@ -1,0 +1,376 @@
+"""Pass 2 — allocator small-scope model checker.
+
+Exhaustive bounded exploration of ``PageAllocator`` + ``PrefixIndex``
+op sequences (alloc / free / incref / fork / defrag / migrate /
+rebuild) over a small scope — few pages, two regions, shallow depth —
+in the small-scope-hypothesis tradition: allocator bugs in this repo's
+history (refcount leaks, freeing shared pages, cross-region defrag
+moves) all have counterexamples within a handful of operations.
+
+The checker drives the *real* classes next to an independent ledger of
+what the refcounts/trie must be, and asserts after every operation:
+
+* **refcount conservation** — the allocator's live map equals the
+  ledger exactly; no page is freed while references remain, none leaks.
+* **free/used partition** — ``free + used == num_pages`` and every free
+  page sits in its own region's free list.
+* **no double-free / foreign incref** — ``decref``/``incref`` of an
+  unallocated page must raise, and must not mutate state.
+* **alloc atomicity** — a failed allocation leaves the allocator
+  untouched.
+* **region-preserving defrag** — a defrag move never crosses a
+  placement region, and rebuild+remap keeps the refcount multiset.
+* **trie↔physical consistency** — every page the prefix trie points at
+  is live; remap/remove keep the reverse index exact.
+
+Violations are reported as findings whose detail is the **minimal op
+trace** (BFS order guarantees minimality) that reproduces them.
+"""
+from __future__ import annotations
+
+import copy
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .common import Finding
+
+PASS = "allocator-model"
+
+
+@dataclass
+class ModelConfig:
+    num_pages: int = 5
+    n_regions: int = 2
+    communal_pages: int = 1
+    policy: str = "affinity"
+    page_size: int = 2
+    depth: int = 7
+    max_refcount: int = 3
+    max_findings: int = 3
+    max_states: int = 200_000     # safety valve, not expected to bind
+    placed: bool = True
+
+
+def default_defrag_mapping(alloc, placement, movable) -> Dict[int, int]:
+    """Region-preserving compaction: each movable page goes to the lowest
+    free index *inside its own region* (mirrors ``PagedCache.defrag``)."""
+    mapping: Dict[int, int] = {}
+    taken = set(alloc.live_pages())
+    for old in sorted(movable):
+        region = placement.region_of(old) if placement is not None else None
+        if placement is not None:
+            candidates = [p for p in placement.region_pages(region)
+                          if p not in taken and p < old]
+        else:
+            candidates = [p for p in range(old)
+                          if p not in taken]
+        if candidates:
+            new = min(candidates)
+            mapping[old] = new
+            taken.discard(old)
+            taken.add(new)
+    return mapping
+
+
+@dataclass
+class _State:
+    alloc: object
+    prefix: object
+    refs: Dict[int, int]            # ledger: page -> expected refcount
+    trie: set                       # ledger: pages published in the trie
+    home: Dict[int, int]            # ledger: page -> intended home region
+    trace: Tuple[str, ...] = ()
+
+    def clone(self) -> "_State":
+        return _State(copy.deepcopy(self.alloc), copy.deepcopy(self.prefix),
+                      dict(self.refs), set(self.trie), dict(self.home),
+                      self.trace)
+
+    def key(self):
+        a = self.alloc
+        if getattr(a, "placed", False):
+            free = tuple(sorted(
+                (r, tuple(v)) for r, v in a._region_lists.items()))
+        else:
+            free = tuple(a._free)
+        return (tuple(sorted(self.refs.items())),
+                frozenset(self.trie),
+                tuple(sorted(self.home.items())),
+                free)
+
+
+class _Violation(Exception):
+    pass
+
+
+def _tokens_for(page: int, page_size: int) -> np.ndarray:
+    return np.arange(page_size, dtype=np.int64) + page * page_size
+
+
+def check_state(s: _State, cfg: ModelConfig, placement) -> Optional[str]:
+    a = s.alloc
+    live = {p: a.refcount(p) for p in a.live_pages()}
+    if live != s.refs:
+        return (f"refcount conservation violated: allocator holds {live}, "
+                f"ledger expects {s.refs}")
+    if a.free_pages + a.used_pages != cfg.num_pages:
+        return (f"free/used partition broken: {a.free_pages} free + "
+                f"{a.used_pages} used != {cfg.num_pages}")
+    if getattr(a, "placed", False):
+        for r, pool in a._region_lists.items():
+            for p in pool:
+                if placement.region_of(p) != r:
+                    return (f"free page {p} filed under region {r} but "
+                            f"placed in region {placement.region_of(p)}")
+                if p in live:
+                    return f"page {p} simultaneously free and live"
+    by_page = set(getattr(s.prefix, "_by_page", {}))
+    if by_page != s.trie:
+        return (f"trie reverse index {sorted(by_page)} diverged from "
+                f"ledger {sorted(s.trie)}")
+    for p in s.trie:
+        if a.refcount(p) <= 0:
+            return f"prefix trie points at dead page {p}"
+    # exception discipline probed exhaustively at every state: touching
+    # an unallocated page must raise and must not mutate
+    freed = [p for p in range(cfg.num_pages) if p not in s.refs]
+    for p in freed[:2]:
+        probe = copy.deepcopy(a)
+        for opname, op in (("decref", probe.decref), ("incref", probe.incref)):
+            try:
+                op(p)
+            except ValueError:
+                pass
+            else:
+                return (f"{opname}({p}) of a free page did not raise — "
+                        "double-free / foreign-page discipline lost")
+        if (probe.free_pages, sorted(probe.live_pages())) != \
+                (a.free_pages, sorted(a.live_pages())):
+            return f"failed decref/incref of page {p} mutated the allocator"
+    return None
+
+
+def _enabled_ops(s: _State, cfg: ModelConfig, placement):
+    """(op_label, apply_fn) pairs applicable in state ``s``.  Each apply
+    mutates its (cloned) state and may raise :class:`_Violation`."""
+    ops: List[Tuple[str, Callable[[_State], None]]] = []
+    regions = (list(range(cfg.n_regions)) if placement is not None
+               else [None])
+
+    for r in regions:
+        def _alloc(st, r=r):
+            a = st.alloc
+            before = (a.free_pages, sorted(a.live_pages()))
+            got = a.alloc(1, home=r) if r is not None else a.alloc(1)
+            if got is None:
+                after = (a.free_pages, sorted(a.live_pages()))
+                if after != before:
+                    raise _Violation(
+                        "failed alloc mutated the allocator "
+                        f"({before} -> {after})")
+                return
+            st.refs[got[0]] = 1
+            if r is not None:
+                st.home[got[0]] = r
+        ops.append((f"alloc(1, home={r})", _alloc))
+    if placement is not None and cfg.communal_pages:
+        def _alloc_communal(st):
+            got = st.alloc.alloc(1, home=0, communal=1)
+            if got is None:
+                return
+            st.refs[got[0]] = 1
+            st.home[got[0]] = 0
+        ops.append(("alloc(1, communal=1)", _alloc_communal))
+
+    for p in sorted(s.refs):
+        if s.refs[p] < cfg.max_refcount:
+            def _incref(st, p=p):
+                st.alloc.incref(p)
+                st.refs[p] += 1
+            ops.append((f"incref({p})", _incref))
+
+    for p in sorted(s.refs):
+        def _decref(st, p=p):
+            freed = st.alloc.decref(p)
+            st.refs[p] -= 1
+            if st.refs[p] == 0:
+                del st.refs[p]
+                st.home.pop(p, None)
+                if not freed:
+                    raise _Violation(
+                        f"last decref of page {p} did not free it")
+                if p in st.trie:
+                    st.prefix.remove(p)
+                    st.trie.discard(p)
+            elif freed:
+                raise _Violation(
+                    f"page {p} freed while {st.refs[p]} reference(s) "
+                    "remain (shared-page free)")
+        ops.append((f"decref({p})", _decref))
+
+    for p in sorted(s.refs):
+        if p not in s.trie:
+            def _register(st, p=p):
+                st.prefix.register(_tokens_for(p, cfg.page_size), [p],
+                                   cfg.page_size)
+                st.trie.add(p)
+            ops.append((f"register({p})", _register))
+
+    for p in sorted(s.refs):
+        if s.refs[p] >= 2:
+            def _fork(st, p=p):
+                # copy-on-write at the allocator level: the writer takes
+                # a fresh exclusive page and drops its shared reference
+                got = st.alloc.alloc(1, home=st.home.get(p))
+                if got is None:
+                    return
+                st.refs[got[0]] = 1
+                if p in st.home:
+                    st.home[got[0]] = st.home[p]
+                st.alloc.decref(p)
+                st.refs[p] -= 1
+            ops.append((f"fork({p})", _fork))
+
+    if placement is not None:
+        def _migrate(st):
+            # move every spilled exclusive non-trie page home (mirrors
+            # PagedCache.migrate_spilled)
+            for p in sorted(st.refs):
+                if (st.refs[p] != 1 or p in st.trie
+                        or p not in st.home):
+                    continue
+                if placement.region_of(p) == st.home[p]:
+                    continue
+                got = st.alloc.alloc_in(st.home[p], 1)
+                if got is None:
+                    continue
+                if placement.region_of(got[0]) != st.home[p]:
+                    raise _Violation(
+                        f"alloc_in({st.home[p]}) handed out page "
+                        f"{got[0]} from region "
+                        f"{placement.region_of(got[0])}")
+                st.refs[got[0]] = 1
+                st.home[got[0]] = st.home[p]
+                st.alloc.decref(p)
+                del st.refs[p]
+                del st.home[p]
+        ops.append(("migrate_spilled()", _migrate))
+
+    def _defrag(st, mapping_fn):
+        movable = [p for p in st.refs
+                   if st.refs[p] == 1 and p not in st.trie]
+        mapping = mapping_fn(st.alloc, placement, movable)
+        for old, new in mapping.items():
+            if placement is not None and \
+                    placement.region_of(new) != placement.region_of(old):
+                raise _Violation(
+                    f"defrag moved page {old} (region "
+                    f"{placement.region_of(old)}) to page {new} (region "
+                    f"{placement.region_of(new)}) — cross-region move")
+        new_refs = {mapping.get(p, p): rc for p, rc in st.refs.items()}
+        if len(new_refs) != len(st.refs):
+            raise _Violation(
+                f"defrag mapping {mapping} collapses distinct live pages")
+        st.alloc.rebuild(new_refs)
+        st.prefix.remap(mapping)
+        st.refs = new_refs
+        st.home = {mapping.get(p, p): h for p, h in st.home.items()}
+        st.trie = {mapping.get(p, p) for p in st.trie}
+    ops.append(("defrag()", _defrag))
+
+    def _rebuild(st):
+        st.alloc.rebuild(dict(st.refs))
+    ops.append(("rebuild(ledger)", _rebuild))
+    return ops
+
+
+def explore(cfg: Optional[ModelConfig] = None,
+            allocator_cls=None,
+            defrag_mapping: Optional[Callable] = None,
+            log: Optional[Callable[[str], None]] = None) -> List[Finding]:
+    """BFS over op sequences up to ``cfg.depth``; returns findings whose
+    detail is the minimal counterexample trace."""
+    from repro.core.placement import PlacementMap
+    from repro.serving import paged_cache as pc
+
+    cfg = cfg or ModelConfig()
+    allocator_cls = allocator_cls or pc.PageAllocator
+    defrag_mapping = defrag_mapping or default_defrag_mapping
+    src_file = None
+    try:
+        import inspect
+        src_file = inspect.getsourcefile(allocator_cls)
+    except (TypeError, OSError):
+        pass
+
+    placement = None
+    if cfg.placed:
+        placement = PlacementMap(cfg.num_pages, cfg.n_regions,
+                                 communal_pages=cfg.communal_pages)
+        root_alloc = allocator_cls(cfg.num_pages, placement=placement,
+                                   policy=cfg.policy)
+    else:
+        root_alloc = allocator_cls(cfg.num_pages)
+    root = _State(root_alloc, pc.PrefixIndex(), {}, set(), {})
+
+    findings: List[Finding] = []
+    t0 = time.time()
+    seen = {root.key()}
+    frontier = [root]
+    n_states = 1
+
+    def record(trace, msg):
+        findings.append(Finding(
+            PASS, "allocator-invariant", msg, file=src_file,
+            detail="minimal op trace:\n" + "\n".join(
+                f"  {i + 1}. {op}" for i, op in enumerate(trace))
+            + f"\n  => {msg}"))
+
+    for depth in range(cfg.depth):
+        nxt: List[_State] = []
+        for s in frontier:
+            for label, apply_fn in _enabled_ops(s, cfg, placement):
+                if len(findings) >= cfg.max_findings:
+                    return findings
+                child = s.clone()
+                child.trace = s.trace + (label,)
+                try:
+                    if label == "defrag()":
+                        apply_fn(child, defrag_mapping)
+                    else:
+                        apply_fn(child)
+                except _Violation as v:
+                    record(child.trace, str(v))
+                    continue
+                except Exception as e:          # unexpected crash
+                    record(child.trace,
+                           f"unexpected {type(e).__name__}: {e}")
+                    continue
+                bad = check_state(child, cfg, placement)
+                if bad is not None:
+                    record(child.trace, bad)
+                    continue
+                k = child.key()
+                if k not in seen and n_states < cfg.max_states:
+                    seen.add(k)
+                    nxt.append(child)
+                    n_states += 1
+        frontier = nxt
+        if not frontier:
+            break
+    if log is not None:
+        log(f"allocator-model: explored {n_states} states to depth "
+            f"{cfg.depth} in {time.time() - t0:.1f}s")
+    return findings
+
+
+def run(log: Optional[Callable[[str], None]] = None) -> List[Finding]:
+    """Both scopes: placed (regions + communal + migration/defrag) and
+    the legacy unplaced free-list."""
+    findings = explore(ModelConfig(), log=log)
+    findings += explore(ModelConfig(num_pages=4, placed=False),
+                        log=log)
+    return findings

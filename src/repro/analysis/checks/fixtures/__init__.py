@@ -1,0 +1,16 @@
+"""Regression fixtures that re-introduce historical bugs.
+
+Each module here reproduces one seed-era defect class so the checker
+suite can be tested against a known-bad input (`python -m
+repro.analysis.checks --fixture <name>` must exit non-zero):
+
+* ``pr2_scatter_clip`` — the clipped token scatter (PR-2 clip-aliasing)
+* ``pr2_inactive_lane`` — table handoff without the inactive-lane
+  scratch route (PR-2 inactive-lane corruption)
+* ``pr2_refcount_free`` — an allocator that frees shared pages, and a
+  defrag mapping that moves pages across placement regions
+* ``pr6_metrics_drift`` — a cluster roll-up that drops a per-replica
+  co-design metric (PR-6 ad-hoc name-matching drift)
+
+Nothing in this package is imported by production code.
+"""

@@ -1,0 +1,16 @@
+"""PR-2 inactive-lane reproduction (AST fixture, never executed).
+
+The engine hands block tables to the paged Pallas kernel without first
+routing *inactive* lanes' rows to the scratch page.  The kernel writes
+every lane unconditionally, so a parked slot's stale table — possibly
+pointing at refcounted shared pages — gets corrupted.
+``kernel_lint.check_inactive_lane_ast`` must flag this function.
+"""
+
+
+def _decode_paged_pallas(self, toks):
+    # BUG: no jnp.where(active[:, None], tables, num_pages) scratch
+    # route — parked slots' stale rows go straight to the kernel
+    tables = self.paged.tables_device()
+    lengths = self.paged.lengths_device()
+    return self._paged_step_fn(self.params, toks, tables, lengths)

@@ -1,0 +1,27 @@
+"""PR-2 clip-aliasing reproduction: the seed-era token scatter.
+
+Clips the block index into the table instead of *detecting* an
+out-of-window position, ignores the ``active`` mask, and never routes to
+the scratch page — a write past the mapped window lands on the window's
+last live page and an inactive slot writes through its stale table.
+``kernel_lint.lint_scatter_token`` must flag all three invariants.
+"""
+import jax.numpy as jnp
+
+BATCH_AXIS = 1
+SEQ_AXIS = 2
+
+
+def scatter_token_clipped(pool, leaf, tables, pos, active, page_size):
+    b = leaf.shape[BATCH_AXIS]
+    blk = pos // page_size
+    off = pos % page_size
+    nblk = tables.shape[1]
+    blk = jnp.clip(blk, 0, nblk - 1)     # BUG: clip, never detect
+    page = jnp.take_along_axis(tables, blk[:, None], axis=1)[:, 0]
+    pos = jnp.clip(pos, 0, leaf.shape[SEQ_AXIS] - 1)
+    val = jnp.take_along_axis(
+        leaf, pos.reshape((1, b) + (1,) * (leaf.ndim - 2)),
+        axis=SEQ_AXIS)
+    val = jnp.squeeze(val, axis=SEQ_AXIS)
+    return pool.at[:, page, off].set(val)  # BUG: `active` unused

@@ -1,0 +1,374 @@
+"""Pass 3: engine/sim mirror-drift analysis (pure AST, no imports of jax).
+
+Extracts the real surfaces — ``EngineConfig`` fields, ``simulate_serving``
+keyword parameters, ``Scheduler.metrics`` / ``Router.metrics`` emitted
+keys and consumed keys, ``ServingReport`` / ``ClusterReport`` fields, and
+the ``kv_report`` / ``codesign_report`` key sets — then diffs each one,
+in both directions, against the contract in :mod:`mirror_spec`.
+
+Every check is path-parameterizable so the regression fixtures can point
+it at a source file that re-introduces a historical drift.
+"""
+from __future__ import annotations
+
+import ast
+import importlib.util
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+from .common import Finding
+from . import mirror_spec as SPEC
+
+PASS = "mirror-drift"
+
+#: name -> line of first occurrence
+Surface = Dict[str, int]
+
+
+# --- source resolution ----------------------------------------------------
+def module_path(dotted: str) -> str:
+    spec = importlib.util.find_spec(dotted)
+    if spec is None or spec.origin is None:
+        raise ImportError(f"cannot locate source for {dotted}")
+    return spec.origin
+
+
+def _rel(path: str) -> str:
+    p = Path(path).resolve()
+    for parent in p.parents:
+        if parent.name == "src":
+            return str(p.relative_to(parent.parent))
+    return str(p)
+
+
+_TREES: Dict[str, ast.Module] = {}
+
+
+def _tree(path: str) -> ast.Module:
+    if path not in _TREES:
+        _TREES[path] = ast.parse(Path(path).read_text())
+    return _TREES[path]
+
+
+def _find_class(tree: ast.Module, name: str) -> ast.ClassDef:
+    for node in tree.body:
+        if isinstance(node, ast.ClassDef) and node.name == name:
+            return node
+    raise LookupError(f"class {name} not found")
+
+
+def _find_func(scope, name: str) -> ast.FunctionDef:
+    for node in scope.body:
+        if isinstance(node, ast.FunctionDef) and node.name == name:
+            return node
+    raise LookupError(f"function {name} not found")
+
+
+# --- surface extraction ---------------------------------------------------
+def dataclass_fields(path: str, cls: str) -> Surface:
+    """Annotated field names of a (data)class body."""
+    out: Surface = {}
+    for node in _find_class(_tree(path), cls).body:
+        if isinstance(node, ast.AnnAssign) and isinstance(node.target,
+                                                          ast.Name):
+            out.setdefault(node.target.id, node.lineno)
+    return out
+
+
+def kwonly_params(path: str, func: str) -> Surface:
+    f = _find_func(_tree(path), func)
+    return {a.arg: a.lineno for a in f.args.kwonlyargs}
+
+
+def _dict_keys(node: ast.Dict) -> List[Tuple[str, int]]:
+    return [(k.value, k.lineno) for k in node.keys
+            if isinstance(k, ast.Constant) and isinstance(k.value, str)]
+
+
+def produced_keys(path: str, cls: Optional[str], func: str,
+                  resolve: Optional[Dict[str, Tuple[str, Optional[str],
+                                                    str]]] = None
+                  ) -> Surface:
+    """Keys a dict-returning method can produce.
+
+    Follows the *returned* dict only: ``return {...}`` keys directly, or
+    for ``return rep`` the keys of ``rep = {...}`` assignments,
+    ``rep["k"] = ...`` subscript stores, and — via ``resolve`` — the keys
+    of helper reports merged with ``rep.update(self.x.helper())`` where
+    ``resolve`` maps ``helper`` to its own ``(path, cls, func)``.
+    Side dicts built for nested structures (e.g. a per-replica
+    breakdown) do not leak into the surface.
+    """
+    scope = _find_class(_tree(path), cls) if cls else _tree(path)
+    f = _find_func(scope, func)
+    ret_names: Set[str] = set()
+    out: Surface = {}
+    for node in ast.walk(f):
+        if isinstance(node, ast.Return):
+            if isinstance(node.value, ast.Dict):
+                for k, ln in _dict_keys(node.value):
+                    out.setdefault(k, ln)
+            elif isinstance(node.value, ast.Name):
+                ret_names.add(node.value.id)
+    if not ret_names:
+        return out
+    for node in ast.walk(f):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id in ret_names
+                and isinstance(node.value, ast.Dict)):
+            for k, ln in _dict_keys(node.value):
+                out.setdefault(k, ln)
+        elif (isinstance(node, ast.Assign) and len(node.targets) == 1
+              and isinstance(node.targets[0], ast.Subscript)
+              and isinstance(node.targets[0].value, ast.Name)
+              and node.targets[0].value.id in ret_names):
+            sl = node.targets[0].slice
+            if isinstance(sl, ast.Constant) and isinstance(sl.value, str):
+                out.setdefault(sl.value, node.lineno)
+        elif (isinstance(node, ast.Call)
+              and isinstance(node.func, ast.Attribute)
+              and node.func.attr == "update"
+              and isinstance(node.func.value, ast.Name)
+              and node.func.value.id in ret_names and node.args):
+            arg = node.args[0]
+            helper = (arg.func.attr if isinstance(arg, ast.Call)
+                      and isinstance(arg.func, ast.Attribute) else None)
+            if resolve and helper in resolve:
+                out.update(produced_keys(*resolve[helper]))
+    return out
+
+
+def bound_receivers(f: ast.FunctionDef, method_names: Set[str]) -> Set[str]:
+    """Local variables bound to ``x.method()`` calls (also through the
+    ``getattr(x, "method", dict)()`` idiom)."""
+    names: Set[str] = set()
+    for node in ast.walk(f):
+        if not (isinstance(node, ast.Assign)
+                and isinstance(node.value, ast.Call)):
+            continue
+        fn = node.value.func
+        attr = None
+        if isinstance(fn, ast.Attribute):
+            attr = fn.attr
+        elif (isinstance(fn, ast.Call) and isinstance(fn.func, ast.Name)
+              and fn.func.id == "getattr" and len(fn.args) >= 2
+              and isinstance(fn.args[1], ast.Constant)):
+            attr = fn.args[1].value
+        if attr in method_names:
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    names.add(t.id)
+    return names
+
+
+def read_keys(path: str, cls: Optional[str], func: str,
+              source_methods: Set[str]) -> Surface:
+    """String keys the method reads (``m["k"]`` / ``m.get("k")``) off
+    variables bound to any of ``source_methods``."""
+    scope = _find_class(_tree(path), cls) if cls else _tree(path)
+    f = _find_func(scope, func)
+    receivers = bound_receivers(f, source_methods)
+    out: Surface = {}
+    for node in ast.walk(f):
+        if (isinstance(node, ast.Subscript)
+                and isinstance(node.value, ast.Name)
+                and node.value.id in receivers
+                and isinstance(node.ctx, ast.Load)
+                and isinstance(node.slice, ast.Constant)
+                and isinstance(node.slice.value, str)):
+            out.setdefault(node.slice.value, node.lineno)
+        elif (isinstance(node, ast.Call)
+              and isinstance(node.func, ast.Attribute)
+              and node.func.attr == "get"
+              and isinstance(node.func.value, ast.Name)
+              and node.func.value.id in receivers
+              and node.args and isinstance(node.args[0], ast.Constant)
+              and isinstance(node.args[0].value, str)):
+            out.setdefault(node.args[0].value, node.lineno)
+    return out
+
+
+# --- contract diffing -----------------------------------------------------
+def _two_way(pairs, left: Surface, right: Surface,
+             left_only: Dict[str, str], right_only: Dict[str, str],
+             *, invariant: str, left_desc: str, right_desc: str,
+             left_file: str, right_file: str) -> List[Finding]:
+    """Diff two surfaces against a pair list + one-sided allowlists.
+
+    Flags: surface names with neither a mirror nor a declared exemption
+    (both directions), and contract entries naming things that no longer
+    exist (stale contract)."""
+    out: List[Finding] = []
+    pair_l = {a for a, _ in pairs}
+    pair_r = {b for _, b in pairs}
+
+    def _f(msg, file, line, inv=invariant):
+        return Finding(PASS, inv, msg, file=_rel(file), line=line)
+
+    for a, b in pairs:
+        if a not in left:
+            out.append(_f(f"contract pairs {left_desc} '{a}' <-> "
+                          f"{right_desc} '{b}', but '{a}' does not exist",
+                          left_file, None, inv="stale-contract"))
+        if b not in right:
+            out.append(_f(f"contract pairs {left_desc} '{a}' <-> "
+                          f"{right_desc} '{b}', but '{b}' does not exist",
+                          right_file, None, inv="stale-contract"))
+    for name, reason_map, file in ((left_only, left, left_file),
+                                   (right_only, right, right_file)):
+        for k in name:
+            if k not in reason_map:
+                out.append(_f(f"contract exempts '{k}' but it no longer "
+                              f"exists", file, None, inv="stale-contract"))
+    for k, ln in left.items():
+        if k not in pair_l and k not in left_only:
+            out.append(_f(f"{left_desc} '{k}' has no {right_desc} mirror "
+                          f"and no declared exemption", left_file, ln))
+    for k, ln in right.items():
+        if k not in pair_r and k not in right_only:
+            out.append(_f(f"{right_desc} '{k}' has no {left_desc} mirror "
+                          f"and no declared exemption", right_file, ln))
+    return out
+
+
+# --- the four checks ------------------------------------------------------
+def check_engine_sim_config(engine_path: Optional[str] = None,
+                            sim_path: Optional[str] = None
+                            ) -> List[Finding]:
+    """EngineConfig fields <-> simulate_serving keyword parameters."""
+    engine_path = engine_path or module_path("repro.serving.engine")
+    sim_path = sim_path or module_path("repro.core.serving_sim")
+    return _two_way(
+        SPEC.ENGINE_SIM_PAIRS,
+        dataclass_fields(engine_path, "EngineConfig"),
+        kwonly_params(sim_path, "simulate_serving"),
+        SPEC.ENGINE_ONLY_CONFIG, SPEC.SIM_ONLY_PARAMS,
+        invariant="config-mirror",
+        left_desc="EngineConfig field", right_desc="simulate_serving param",
+        left_file=engine_path, right_file=sim_path)
+
+
+def check_serving_report(sched_path: Optional[str] = None,
+                         sim_path: Optional[str] = None) -> List[Finding]:
+    """Scheduler.metrics keys <-> ServingReport fields."""
+    sched_path = sched_path or module_path("repro.serving.scheduler")
+    sim_path = sim_path or module_path("repro.core.serving_sim")
+    return _two_way(
+        SPEC.SERVING_REPORT_PAIRS,
+        dataclass_fields(sim_path, "ServingReport"),
+        produced_keys(sched_path, "Scheduler", "metrics"),
+        SPEC.SERVING_REPORT_ONLY, SPEC.SCHEDULER_METRICS_ONLY,
+        invariant="report-mirror",
+        left_desc="ServingReport field", right_desc="Scheduler.metrics key",
+        left_file=sim_path, right_file=sched_path)
+
+
+def check_cluster_report(router_path: Optional[str] = None,
+                         sim_path: Optional[str] = None) -> List[Finding]:
+    """Router.metrics keys <-> ClusterReport fields."""
+    router_path = router_path or module_path("repro.serving.router")
+    sim_path = sim_path or module_path("repro.core.serving_sim")
+    return _two_way(
+        SPEC.CLUSTER_REPORT_PAIRS,
+        dataclass_fields(sim_path, "ClusterReport"),
+        produced_keys(router_path, "Router", "metrics"),
+        SPEC.CLUSTER_REPORT_ONLY, SPEC.ROUTER_METRICS_ONLY,
+        invariant="report-mirror",
+        left_desc="ClusterReport field", right_desc="Router.metrics key",
+        left_file=sim_path, right_file=router_path)
+
+
+def check_router_aggregation(router_path: Optional[str] = None,
+                             router_cls: str = "Router",
+                             sched_path: Optional[str] = None
+                             ) -> List[Finding]:
+    """Router.metrics must consume every scheduler key listed in
+    ROUTER_MUST_AGGREGATE (or drop it with a declared reason), and every
+    key it does read by name must actually be emitted by
+    Scheduler.metrics — the ad-hoc name matching both ways."""
+    router_path = router_path or module_path("repro.serving.router")
+    sched_path = sched_path or module_path("repro.serving.scheduler")
+    emitted = produced_keys(sched_path, "Scheduler", "metrics")
+    reads = read_keys(router_path, router_cls, "metrics", {"metrics"})
+    scope = _find_class(_tree(router_path), router_cls)
+    fline = _find_func(scope, "metrics").lineno
+    out: List[Finding] = []
+    for k in SPEC.ROUTER_MUST_AGGREGATE:
+        if k not in emitted:
+            out.append(Finding(PASS, "stale-contract",
+                               f"ROUTER_MUST_AGGREGATE lists '{k}' but "
+                               f"Scheduler.metrics does not emit it",
+                               file=_rel(sched_path)))
+        elif k not in reads and k not in SPEC.ROUTER_AGGREGATE_DROPS:
+            out.append(Finding(
+                PASS, "cluster-aggregation",
+                f"Scheduler.metrics emits '{k}' but {router_cls}.metrics "
+                f"never aggregates it (and no drop is declared)",
+                file=_rel(router_path), line=fline))
+    for k, ln in reads.items():
+        if k not in emitted:
+            out.append(Finding(
+                PASS, "phantom-read",
+                f"{router_cls}.metrics reads scheduler key '{k}' that "
+                f"Scheduler.metrics never emits",
+                file=_rel(router_path), line=ln))
+    return out
+
+
+def check_kv_report_reads(sched_path: Optional[str] = None,
+                          router_path: Optional[str] = None,
+                          engine_path: Optional[str] = None
+                          ) -> List[Finding]:
+    """Every kv_report / codesign_report key read by Scheduler.metrics or
+    Router.metrics must be produced by some engine's report method."""
+    sched_path = sched_path or module_path("repro.serving.scheduler")
+    router_path = router_path or module_path("repro.serving.router")
+    engine_path = engine_path or module_path("repro.serving.engine")
+    cache_path = module_path("repro.serving.paged_cache")
+    resolve = {"sharing_report": (cache_path, "PagedCache",
+                                  "sharing_report"),
+               "placement_report": (cache_path, "PagedCache",
+                                    "placement_report")}
+    tree = _tree(engine_path)
+    kv_produced: Surface = {}
+    for node in tree.body:
+        if isinstance(node, ast.ClassDef):
+            try:
+                _find_func(node, "kv_report")
+            except LookupError:
+                continue
+            kv_produced.update(produced_keys(engine_path, node.name,
+                                             "kv_report", resolve))
+    cd_produced: Surface = {}
+    for node in tree.body:
+        if isinstance(node, ast.ClassDef):
+            try:
+                _find_func(node, "codesign_report")
+            except LookupError:
+                continue
+            cd_produced.update(produced_keys(engine_path, node.name,
+                                             "codesign_report"))
+    out: List[Finding] = []
+    for path, cls in ((sched_path, "Scheduler"), (router_path, "Router")):
+        for src, produced, label in ((("kv_report",), kv_produced,
+                                      "kv_report"),
+                                     (("codesign_report",), cd_produced,
+                                      "codesign_report")):
+            for k, ln in read_keys(path, cls, "metrics", set(src)).items():
+                if k not in produced:
+                    out.append(Finding(
+                        PASS, "phantom-read",
+                        f"{cls}.metrics reads {label} key '{k}' that no "
+                        f"engine produces", file=_rel(path), line=ln))
+    return out
+
+
+def run() -> List[Finding]:
+    findings: List[Finding] = []
+    findings += check_engine_sim_config()
+    findings += check_serving_report()
+    findings += check_cluster_report()
+    findings += check_router_aggregation()
+    findings += check_kv_report_reads()
+    return findings

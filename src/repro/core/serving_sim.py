@@ -9,7 +9,7 @@ Deterministic: arrivals use an explicit seeded generator (exponential gaps).
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -135,6 +135,10 @@ class TickDecision:
     config: tuple                  # exec_config fingerprint (per-op)
     shapes: tuple                  # distinct logical shapes used
     util: float                    # cycle-weighted MAC utilization
+    # fill/drain penalty charged because this tick's shape profile
+    # differs from the previous tick's on the same stream; 0.0 on
+    # non-reconfiguring ticks (and on the memoized cache entry)
+    reconfig_s: float = 0.0
 
 
 class TickLatencyModel:
@@ -157,12 +161,19 @@ class TickLatencyModel:
     non-reconfigurable substrate has a single legal shape, so its count
     stays 0 by construction — the benchmark's fixed-shape baselines.
 
+    Each reconfiguration is *priced*, not just counted: the tick's
+    decision carries ``reconfig_s`` — ``reconfig_cost_s`` when given,
+    else the substrate's pipeline fill/drain, ``(phys_rows + phys_cols
+    - 2 + reconfig_cycles)`` cycles (SystolicArrayConfig's audit note;
+    MAC trees have no systolic pipeline, so their derived cost is 0).
+
     Drop-in compatible with :class:`DecodeLatencyModel` call sites via
     ``__call__(batch, ctx)``; co-design-aware callers use :meth:`step`.
     """
 
     def __init__(self, sys: NMPSystem, spec: ModelSpec, tp: int = 1,
-                 ctx_bucket: int = 256, prefill_bucket: int = 32):
+                 ctx_bucket: int = 256, prefill_bucket: int = 32,
+                 reconfig_cost_s: Optional[float] = None):
         self.sys = sys
         self.spec = spec
         self.tp = tp
@@ -172,6 +183,19 @@ class TickLatencyModel:
         self._last_shapes: Dict[object, tuple] = {}
         self.reconfigurations = 0
         self.configs_seen: set = set()
+        self.reconfig_cost_s = (self._derived_reconfig_cost()
+                                if reconfig_cost_s is None
+                                else float(reconfig_cost_s))
+
+    def _derived_reconfig_cost(self) -> float:
+        """Fill/drain of the new configuration's systolic pipeline."""
+        sub = self.sys.substrate
+        rows = getattr(sub, "phys_rows", None)
+        cols = getattr(sub, "phys_cols", None)
+        if rows is None or cols is None:
+            return 0.0          # MAC tree: no pipeline to refill
+        cycles = rows + cols - 2 + getattr(sub, "reconfig_cycles", 1)
+        return cycles / self.sys.freq_hz
 
     @staticmethod
     def _bucket(v: int, b: int) -> int:
@@ -219,19 +243,28 @@ class TickLatencyModel:
         if d is None:
             d = self._cache[sig] = self._evaluate(sig)
         last = self._last_shapes.get(stream)
-        if last is not None and last != d.shapes:
+        reconfigured = last is not None and last != d.shapes
+        if reconfigured:
             self.reconfigurations += 1
         self._last_shapes[stream] = d.shapes
         self.configs_seen.add(d.config)
+        if reconfigured and self.reconfig_cost_s > 0.0:
+            # priced copy; the cached entry stays penalty-free so
+            # non-reconfiguring ticks keep returning it unchanged
+            return replace(d, reconfig_s=self.reconfig_cost_s)
         return d
 
     def __call__(self, batch: int, ctx: int) -> float:
-        return self.step(batch, [ctx] * max(1, batch)).time_s
+        d = self.step(batch, [ctx] * max(1, batch))
+        return d.time_s + d.reconfig_s
 
 
 def nmp_tick_model(sys: NMPSystem, spec: ModelSpec, tp: int = 1,
-                   ctx_bucket: int = 256) -> TickLatencyModel:
-    return TickLatencyModel(sys, spec, tp=tp, ctx_bucket=ctx_bucket)
+                   ctx_bucket: int = 256,
+                   reconfig_cost_s: Optional[float] = None
+                   ) -> TickLatencyModel:
+    return TickLatencyModel(sys, spec, tp=tp, ctx_bucket=ctx_bucket,
+                            reconfig_cost_s=reconfig_cost_s)
 
 
 def _pages(n_tokens: int, page_size: int) -> int:
@@ -490,7 +523,7 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
                                          - pf.prefill_remaining
                                          + step_toks) if pf else 0,
                             stream=tick_stream)
-            it, stall = dec.decode_s, dec.prefill_s
+            it, stall = dec.decode_s + dec.reconfig_s, dec.prefill_s
             tick_util_sum += dec.util
             tick_iters += 1
         else:
@@ -626,6 +659,7 @@ class ClusterReport:
     preemptions: int
     # live co-design metrics (TickLatencyModel callers only)
     reconfigurations: int = 0   # cross-tick shape changes, all replicas
+    substrate_configs: int = 0  # distinct per-op configurations seen
     array_util_mean: float = 0.0  # mean per-tick MAC utilization
 
 
@@ -756,7 +790,7 @@ class _Replica:
             dec = tick_step(len(self.active),
                             [r.ctx() for r in self.active],
                             stream=self._tick_stream)
-            it = dec.time_s
+            it = dec.time_s + dec.reconfig_s
             self.tick_util_sum += dec.util
             self.tick_iters += 1
         else:
@@ -924,6 +958,7 @@ def simulate_cluster(latency: DecodeLatencyModel, spec: ModelSpec,
         preemptions=sum(rep.preemptions for rep in reps),
         reconfigurations=(getattr(latency, "reconfigurations", 0)
                           - reconfigs0),
+        substrate_configs=len(getattr(latency, "configs_seen", ())),
         array_util_mean=(sum(rep.tick_util_sum for rep in reps)
                          / max(1, sum(rep.tick_iters for rep in reps))
                          if any(rep.tick_iters for rep in reps) else 0.0))

@@ -122,6 +122,12 @@ def main():
                     choices=[8, 16, 32, 64],
                     help="price a fixed rows x (4096/rows) array instead "
                          "of the reconfigurable SNAKE substrate")
+    ap.add_argument("--reconfig-cost", type=float, default=None,
+                    metavar="SECONDS",
+                    help="modeled-clock charge per substrate "
+                         "reconfiguration (shape-profile change); "
+                         "default derives the pipeline fill/drain cost "
+                         "from the array geometry")
     ap.add_argument("--eos-rate", type=float, default=None,
                     help="per-step early-stop probability (samples "
                          "per-request decode budgets)")
@@ -140,6 +146,11 @@ def main():
                  "page pool to partition)")
     if args.codesign_rows and not args.codesign:
         ap.error("--codesign-rows requires --codesign")
+    if args.reconfig_cost is not None and not args.codesign:
+        ap.error("--reconfig-cost requires --codesign (there is no "
+                 "modeled clock to charge otherwise)")
+    if args.reconfig_cost is not None and args.reconfig_cost < 0:
+        ap.error("--reconfig-cost must be >= 0")
 
     entry = registry.get(args.arch, reduced=not args.full)
     ecfg = EngineConfig(max_batch=args.max_batch,
@@ -156,7 +167,8 @@ def main():
                         placement=args.placement,
                         placement_regions=args.placement_regions,
                         codesign=args.codesign,
-                        codesign_rows=args.codesign_rows)
+                        codesign_rows=args.codesign_rows,
+                        codesign_reconfig_cost_s=args.reconfig_cost)
     reqs = build_trace(args, entry.config.vocab)
     if args.replicas > 1:
         router = make_cluster(entry, ecfg, args.replicas,

@@ -114,6 +114,10 @@ class EngineConfig:
     # engine itself runs tp=1)
     codesign_spec: Optional[object] = None
     codesign_tp: Optional[int] = None
+    # seconds charged to the modeled clock per substrate reconfiguration
+    # (shape-profile change); None derives the pipeline fill/drain cost
+    # from the substrate geometry
+    codesign_reconfig_cost_s: Optional[float] = None
 
 
 def _insert_slot(cache, new, slot: int):
@@ -372,7 +376,8 @@ class ServingEngine:
         self._codesign_hw = hw
         spec = self.ecfg.codesign_spec or self.entry.config.nmp_spec()
         self._tick_model = nmp_tick_model(
-            hw, spec, tp=self.ecfg.codesign_tp or self.tp)
+            hw, spec, tp=self.ecfg.codesign_tp or self.tp,
+            reconfig_cost_s=self.ecfg.codesign_reconfig_cost_s)
 
     def _note_tick(self, batch: int, ctxs: List[int], pf_tokens: int,
                    pf_ctx: int) -> None:
@@ -381,7 +386,7 @@ class ServingEngine:
             return
         d = self._tick_model.step(batch, ctxs, prefill_tokens=pf_tokens,
                                   prefill_ctx=pf_ctx)
-        self.modeled_time_s += d.time_s
+        self.modeled_time_s += d.time_s + d.reconfig_s
         self._tick_util_sum += d.util
         self._tick_steps += 1
 

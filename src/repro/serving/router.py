@@ -149,6 +149,7 @@ class Router:
         all_done: List[RequestState] = []
         logical_peak = physical_peak = 0
         reconfigs = 0
+        substrate_cfgs = 0
         modeled_rate = 0.0
         util_sum, util_n = 0.0, 0
         for i, (eng, sch) in enumerate(zip(self.engines,
@@ -158,6 +159,10 @@ class Router:
             # live co-design aggregates (replicas run in parallel, so
             # the cluster's modeled rate is the sum of per-replica rates)
             reconfigs += m.get("reconfigurations", 0)
+            # each replica owns its tick model, so the cluster-level
+            # figure is the busiest replica's distinct-config count
+            substrate_cfgs = max(substrate_cfgs,
+                                 m.get("substrate_configs", 0))
             modeled_rate += m.get("modeled_tokens_per_s", 0.0)
             if m.get("modeled_time_s", 0.0) > 0:
                 util_sum += m.get("array_util_mean", 0.0)
@@ -203,6 +208,7 @@ class Router:
                                 if physical_peak else 1.0),
             # live co-design aggregates (0 when no replica runs codesign)
             "reconfigurations": reconfigs,
+            "substrate_configs": substrate_cfgs,
             "modeled_tokens_per_s": modeled_rate,
             "array_util_mean": util_sum / util_n if util_n else 0.0,
             "per_replica": per_replica,

@@ -1,0 +1,106 @@
+"""Invariant checker suite (PR 7).
+
+The three passes must land clean on the repo, and each regression
+fixture — a reproduction of a historical bug — must be flagged with an
+actionable location.  The CLI contract (exit 0 clean / non-zero on
+findings) is what CI gates on.
+"""
+import time
+
+import pytest
+
+from repro.analysis.checks import (FIXTURE_NAMES, run_fixture, run_pass)
+from repro.analysis.checks.__main__ import main as checks_main
+
+
+# --- the repo itself is clean ------------------------------------------
+def test_repo_clean_kernel_aliasing():
+    assert run_pass("kernel-aliasing") == []
+
+
+def test_repo_clean_allocator_model_under_budget():
+    t0 = time.time()
+    assert run_pass("allocator-model") == []
+    assert time.time() - t0 < 60          # the CI budget, with margin
+
+
+def test_repo_clean_mirror_drift():
+    assert run_pass("mirror-drift") == []
+
+
+# --- seeded regressions are flagged with actionable locations ----------
+def test_scatter_clip_fixture_flags_all_three_invariants():
+    findings = run_fixture("pr2-scatter-clip")
+    invariants = {f.invariant for f in findings}
+    assert {"scatter-window-guard", "scatter-scratch-route",
+            "scatter-active-guard"} <= invariants
+    for f in findings:
+        assert f.file and f.file.endswith("pr2_scatter_clip.py")
+        assert f.line and f.line > 0
+        assert "pr2_scatter_clip.py" in f.location
+
+
+def test_inactive_lane_fixture_flagged_at_function():
+    findings = run_fixture("pr2-inactive-lane")
+    assert findings
+    assert all(f.invariant == "host-inactive-lane" for f in findings)
+    f = findings[0]
+    assert f.file.endswith("pr2_inactive_lane.py") and f.line > 0
+    assert "_decode_paged_pallas" in f.message
+
+
+def test_refcount_fixture_yields_minimal_counterexample_traces():
+    findings = run_fixture("pr2-refcount-free")
+    assert findings
+    shared_free = [f for f in findings
+                   if "reference(s) remain" in f.message]
+    assert shared_free, "the shared-page free was not caught"
+    f = shared_free[0]
+    assert f.file.endswith("pr2_refcount_free.py")
+    assert "minimal op trace" in f.detail
+    # BFS order: the very shortest reproduction is alloc/incref/decref
+    steps = [ln for ln in f.detail.splitlines()
+             if ln.strip() and ln.strip()[0].isdigit()]
+    assert len(steps) == 3
+    cross = [f for f in findings if "cross-region" in f.message]
+    assert cross, "the cross-region defrag move was not caught"
+    assert "defrag()" in cross[0].detail
+
+
+def test_metrics_drift_fixture_flags_dropped_key():
+    findings = run_fixture("pr6-metrics-drift")
+    assert findings
+    f = findings[0]
+    assert f.invariant == "cluster-aggregation"
+    assert "substrate_configs" in f.message
+    assert f.file.endswith("pr6_metrics_drift.py") and f.line > 0
+
+
+def test_stale_contract_entries_are_findings(monkeypatch):
+    """The contract file itself is checked: an entry naming a metric
+    that no longer exists must surface, not rot silently."""
+    from repro.analysis.checks import mirror_drift, mirror_spec
+    monkeypatch.setattr(
+        mirror_spec, "ROUTER_MUST_AGGREGATE",
+        list(mirror_spec.ROUTER_MUST_AGGREGATE) + ["modeled_flops"])
+    findings = mirror_drift.check_router_aggregation()
+    assert any(f.invariant == "stale-contract"
+               and "modeled_flops" in f.message for f in findings)
+
+
+# --- CLI contract -------------------------------------------------------
+def test_cli_exit_codes(capsys):
+    assert checks_main(["--pass", "mirror-drift", "-q"]) == 0
+    out = capsys.readouterr().out
+    assert "OK (0 findings)" in out
+    for name in ("pr6-metrics-drift", "pr2-scatter-clip"):
+        assert checks_main(["--fixture", name, "-q"]) == 1
+        out = capsys.readouterr().out
+        assert "finding(s)" in out
+
+
+def test_cli_rejects_unknown_fixture():
+    with pytest.raises(SystemExit):
+        checks_main(["--fixture", "no-such-fixture"])
+    assert set(FIXTURE_NAMES) == {"pr2-scatter-clip", "pr2-inactive-lane",
+                                  "pr2-refcount-free", "pr6-metrics-drift"}

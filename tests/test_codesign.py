@@ -200,3 +200,114 @@ def test_chunked_prefill_skips_resident_prefix_token_exact():
     assert shared.prefill_tokens_skipped > 0
     assert shared.kv_report()["prefill_skipped_tokens"] \
         == shared.prefill_tokens_skipped
+
+
+# --- reconfiguration pricing (fill/drain penalty) ----------------------
+def test_reconfig_cost_derived_from_array_geometry():
+    """Default penalty is the pipeline fill/drain of the new
+    configuration: (rows + cols - 2 + reconfig_cycles) cycles.  A MAC
+    tree has no systolic pipeline, so its derived cost is zero."""
+    sa = SNAKE.substrate
+    cyc = sa.phys_rows + sa.phys_cols - 2 + sa.reconfig_cycles
+    tm = nmp_tick_model(SNAKE, SPEC, tp=8)
+    assert tm.reconfig_cost_s == pytest.approx(cyc / SNAKE.freq_hz)
+    assert tm.reconfig_cost_s > 0
+    from repro.core.hw import mactree_system
+    assert nmp_tick_model(mactree_system(), SPEC).reconfig_cost_s == 0.0
+    assert nmp_tick_model(SNAKE, SPEC, reconfig_cost_s=0.25
+                          ).reconfig_cost_s == 0.25
+
+
+def test_reconfiguration_pricing_dips_modeled_throughput():
+    """Each shape-profile change is charged, not just counted: the same
+    tick sequence priced with a reconfig cost is slower by exactly
+    cost x count, memoization identity is preserved, and a fixed-shape
+    substrate never pays (it never reconfigures)."""
+    seq = ((1, 0), (32, 0), (1, 256), (64, 0), (32, 0))
+
+    def run(tm):
+        total = 0.0
+        for batch, pf in seq:
+            d = tm.step(batch, [2048] * batch, prefill_tokens=pf,
+                        prefill_ctx=2048, stream="a")
+            total += d.time_s + d.reconfig_s
+        return total
+
+    free = nmp_tick_model(SNAKE, MOE_SPEC, tp=8, reconfig_cost_s=0.0)
+    t_free = run(free)
+    assert free.reconfigurations > 0
+    cost = 1e-3
+    priced = nmp_tick_model(SNAKE, MOE_SPEC, tp=8, reconfig_cost_s=cost)
+    t_priced = run(priced)
+    assert priced.reconfigurations == free.reconfigurations
+    assert t_priced == pytest.approx(
+        t_free + cost * priced.reconfigurations)
+    # the cached entry stays penalty-free: a repeat of the same
+    # signature with no profile change is the identical object again
+    d1 = priced.step(32, [2048] * 32, stream="a")
+    d2 = priced.step(32, [2048] * 32, stream="a")
+    assert d2 is d1 and d2.reconfig_s == 0.0
+    fixed = nmp_tick_model(fixed_sa_system(16, 256), MOE_SPEC, tp=8,
+                           reconfig_cost_s=cost)
+    for batch, pf in seq:
+        d = fixed.step(batch, [2048] * batch, prefill_tokens=pf,
+                       prefill_ctx=2048, stream="a")
+        assert d.reconfig_s == 0.0
+    assert fixed.reconfigurations == 0
+
+
+def test_simulate_serving_charges_reconfigurations():
+    """The analytic mirror's clock pays the penalty: same workload, same
+    decoded tokens, strictly lower modeled throughput when
+    reconfigurations are priced high."""
+    kw = dict(rate_req_s=100.0, system="SNAKE", n_requests=4,
+              input_len=512, output_len=32, max_batch=4,
+              prefill_on_device=True, prefill_chunk=256)
+    free = simulate_serving(
+        nmp_tick_model(SNAKE, MOE_SPEC, tp=8, reconfig_cost_s=0.0),
+        MOE_SPEC, **kw)
+    priced = simulate_serving(
+        nmp_tick_model(SNAKE, MOE_SPEC, tp=8, reconfig_cost_s=5e-3),
+        MOE_SPEC, **kw)
+    assert priced.decoded_tokens == free.decoded_tokens
+    assert priced.reconfigurations > 0
+    assert priced.makespan_s > free.makespan_s
+    assert priced.tokens_per_s < free.tokens_per_s
+
+
+def test_engine_reconfig_cost_knob_charges_modeled_clock():
+    """EngineConfig.codesign_reconfig_cost_s threads to the tick model
+    and the engine's modeled clock pays time_s + reconfig_s per tick —
+    the total penalty is exactly cost x reconfigurations.  (Tick
+    compositions drift run-to-run under wall-clock scheduling, so the
+    identity is checked within one run, not across two.)"""
+    entry = registry.get("yi-6b", reduced=True)
+    reqs = make_trace(entry.config.vocab, rate_req_s=500.0, n_requests=4,
+                      prompt_len=40, seed=3)
+    cost = 2e-3
+    ecfg = EngineConfig(max_batch=2, max_seq=64, max_new_tokens=4,
+                        paged=True, page_size=8, prefill_chunk=16,
+                        codesign=True, codesign_reconfig_cost_s=cost)
+    eng = make_engine(entry, ecfg)
+    tm = eng._tick_model
+    assert tm.reconfig_cost_s == cost
+    seen = []
+    orig = tm.step
+
+    def recording_step(*a, **kw):
+        d = orig(*a, **kw)
+        seen.append(d)
+        return d
+
+    tm.step = recording_step
+    eng.run_trace(reqs)
+    assert seen
+    assert eng.modeled_time_s == pytest.approx(
+        sum(d.time_s + d.reconfig_s for d in seen))
+    assert sum(d.reconfig_s for d in seen) == pytest.approx(
+        cost * tm.reconfigurations)
+    # default (no knob) derives the fill/drain cost from the substrate
+    eng2 = make_engine(entry, EngineConfig(
+        max_batch=2, max_seq=64, max_new_tokens=4, paged=True,
+        page_size=8, codesign=True))
+    assert eng2._tick_model.reconfig_cost_s > 0
