@@ -37,6 +37,7 @@ MODULES = [
     "serving_router",      # multi-replica routing policies (prefix affinity)
     "serving_placement",   # stack-aware page placement (gather-cost sweep)
     "serving_codesign",    # per-tick shape/dataflow co-design vs fixed SAs
+    "serving_fused",       # fused decode loop: fusion horizon x batch sweep
 ]
 
 

@@ -83,11 +83,18 @@ def _fx_metrics_drift(log=None) -> List[Finding]:
         router_path=str(_FIXDIR / "pr6_metrics_drift.py"))
 
 
+def _fx_fused_double_count(log=None) -> List[Finding]:
+    from . import mirror_drift
+    return mirror_drift.check_fused_emit_guard(
+        engine_path=str(_FIXDIR / "pr8_fused_double_count.py"))
+
+
 FIXTURES = {
     "pr2-scatter-clip": _fx_scatter_clip,
     "pr2-inactive-lane": _fx_inactive_lane,
     "pr2-refcount-free": _fx_refcount_free,
     "pr6-metrics-drift": _fx_metrics_drift,
+    "pr8-fused-double-count": _fx_fused_double_count,
 }
 FIXTURE_NAMES = tuple(sorted(FIXTURES))
 

@@ -367,10 +367,100 @@ def explore(cfg: Optional[ModelConfig] = None,
     return findings
 
 
+def check_table_mirror(log: Optional[Callable[[str], None]] = None
+                       ) -> List[Finding]:
+    """Scripted drive of the real ``PagedCache`` device-table mirror.
+
+    PR-8 made the ``(B, nblk)`` device block-table mirror incrementally
+    maintained (per-row refresh on alloc/extend/free, per-entry on
+    copy-on-write forks) instead of rebuilt from the host tables every
+    tick.  This check runs a short op sequence covering every mutation
+    class — shared-prefix mapping, CoW fork, growth, free, defrag — and
+    after each op asserts (a) the mirror equals a fresh rebuild
+    (``mirror_consistent``) and (b) the hot-path ops kept the mirror
+    alive instead of cheating by invalidating it (defrag alone may drop
+    it: renumbering rewrites every row anyway).
+    """
+    import jax.numpy as jnp
+    from repro.serving.paged_cache import PagedCache
+    import inspect
+
+    class _Entry:
+        """Minimal cache-bearing model stub: one layer, one KV head."""
+
+        def cache_zeros(self, max_batch, max_seq, tp=1):
+            return {"k": jnp.zeros((1, max_batch, max_seq, 1, 2),
+                                   jnp.float32),
+                    "v": jnp.zeros((1, max_batch, max_seq, 1, 2),
+                                   jnp.float32),
+                    "lengths": jnp.zeros((max_batch,), jnp.int32)}
+
+    entry = _Entry()
+    cache = PagedCache(entry, max_batch=3, max_seq=8, page_size=2,
+                       num_pages=6, share=True)
+    src_file = inspect.getsourcefile(PagedCache)
+    findings: List[Finding] = []
+    t0 = time.time()
+    toks = np.arange(4, dtype=np.int64)
+
+    # (label, op, must_keep_mirror_alive)
+    script = [
+        ("tables_device()", lambda: cache.tables_device(), True),
+        ("alloc_slot(0, 4, tokens)",
+         lambda: cache.alloc_slot(0, 4, tokens=toks), True),
+        ("write_slot(0, cache1, 4)",
+         lambda: cache.write_slot(0, entry.cache_zeros(1, 4), 4), True),
+        ("alloc_slot(1, 4, tokens)   # maps shared prefix",
+         lambda: cache.alloc_slot(1, 4, tokens=toks), True),
+        ("cow_for_write(1, 0)        # forks shared page",
+         lambda: cache.cow_for_write(1, 0), True),
+        ("extend_slot(1, 6)", lambda: cache.extend_slot(1, 6), True),
+        ("free_slot(0)", lambda: cache.free_slot(0), True),
+        ("defrag()", lambda: cache.defrag(), False),
+        ("tables_device()            # rebuild after defrag",
+         lambda: cache.tables_device(), True),
+        ("alloc_slot(2, 3)", lambda: cache.alloc_slot(2, 3), True),
+    ]
+    done: List[str] = []
+    for label, op, keep_alive in script:
+        try:
+            op()
+        except Exception as e:          # noqa: BLE001 — report, don't crash CI
+            findings.append(Finding(
+                PASS, "table-mirror",
+                f"scripted op {label.split('#')[0].strip()} raised "
+                f"{type(e).__name__}: {e}", file=src_file,
+                detail="after ops:\n" + "\n".join(
+                    f"  {i + 1}. {o}" for i, o in enumerate(done))))
+            return findings
+        done.append(label)
+        if keep_alive and cache._tables_dev is None:
+            findings.append(Finding(
+                PASS, "table-mirror",
+                f"{label.split('#')[0].strip()} dropped the device table "
+                f"mirror — hot-path ops must refresh it in place, not "
+                f"invalidate it", file=src_file,
+                detail="op trace:\n" + "\n".join(
+                    f"  {i + 1}. {o}" for i, o in enumerate(done))))
+        if not cache.mirror_consistent():
+            findings.append(Finding(
+                PASS, "table-mirror",
+                f"device table mirror diverged from host tables after "
+                f"{label.split('#')[0].strip()}", file=src_file,
+                detail="op trace:\n" + "\n".join(
+                    f"  {i + 1}. {o}" for i, o in enumerate(done))))
+    if log is not None:
+        log(f"allocator-model: table-mirror script ({len(script)} ops) "
+            f"in {time.time() - t0:.1f}s")
+    return findings
+
+
 def run(log: Optional[Callable[[str], None]] = None) -> List[Finding]:
     """Both scopes: placed (regions + communal + migration/defrag) and
-    the legacy unplaced free-list."""
+    the legacy unplaced free-list; plus the scripted device-table-mirror
+    drive over the real ``PagedCache``."""
     findings = explore(ModelConfig(), log=log)
     findings += explore(ModelConfig(num_pages=4, placed=False),
                         log=log)
+    findings += check_table_mirror(log=log)
     return findings

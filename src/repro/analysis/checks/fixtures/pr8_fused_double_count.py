@@ -1,0 +1,39 @@
+"""Regression fixture: PR-8 fused tick double-counting a finished lane.
+
+Stripped-down copy of the fused-tick bookkeeping from
+``repro.serving.engine.PagedServingEngine._apply_fused`` with the
+per-step emit guard removed.  The fused scan always runs the padded
+``n_steps`` iterations and reports which steps each lane actually
+executed in ``emit_seq`` — a lane that hits eos mid-horizon (or a
+horizon shorter than the padded scan length) keeps producing frozen
+tokens for the remaining steps.  Appending without consulting the mask
+pushes those frozen duplicates into ``tokens_out``: the finished lane's
+final token is double-counted and the fused token stream silently
+diverges from the per-tick engine.
+
+This file is never imported by the engine; the mirror-drift pass's
+``check_fused_emit_guard`` is pointed at it to prove the AST check
+still catches the bug class.
+"""
+
+
+class PagedServingEngine:
+    def _apply_fused(self, tok_seq, emit_seq, k, t0, t1):
+        times = [t0 + (j + 1) * (t1 - t0) / k for j in range(k)]
+        finished = 0
+        for slot, req in list(self.active.items()):
+            last_t = t1
+            for j in range(k):
+                # BUG: no `if not emit_seq[j, slot]: continue` guard —
+                # frozen steps of an eos'd lane are appended as if they
+                # had run, double-counting its final token.
+                req.tokens_out.append(int(tok_seq[j, slot]))
+                req.token_times.append(times[j])
+                last_t = times[j]
+                self._lengths_host[slot] += 1
+            if len(req.tokens_out) >= self._budget(req):
+                req.finish_s = last_t
+                self.completed.append(req)
+                del self.active[slot]
+                finished += 1
+        return finished

@@ -364,6 +364,73 @@ def check_kv_report_reads(sched_path: Optional[str] = None,
     return out
 
 
+def check_fused_emit_guard(engine_path: Optional[str] = None,
+                           cls: str = "PagedServingEngine",
+                           func: str = "_apply_fused") -> List[Finding]:
+    """Fused-tick token accounting: every ``req.tokens_out.append`` in the
+    fused apply path must sit behind the per-step emit mask.
+
+    The fused scan emits a fixed ``n_steps``-long token sequence per slot
+    and a boolean emit mask saying which steps actually ran (the slot may
+    finish on eos mid-horizon, or the traced horizon may be shorter than
+    the padded scan length).  Appending a token without consulting the
+    mask double-counts a finished slot's final token — the token stream
+    silently diverges from the per-tick engine.  Statement order decides
+    guardedness: an ``if`` whose test mentions the emit mask guards its
+    body, and a guarded branch that ends in ``continue``/``break``/
+    ``return``/``raise`` guards everything after it in the same body.
+    """
+    engine_path = engine_path or module_path("repro.serving.engine")
+    try:
+        scope = _find_class(_tree(engine_path), cls)
+        f = _find_func(scope, func)
+    except LookupError:
+        return [Finding(PASS, "fused-emit-guard",
+                        f"{cls}.{func} not found — fused apply path "
+                        f"missing or renamed", file=_rel(engine_path))]
+
+    def _is_emit_test(test: ast.expr) -> bool:
+        return "emit" in ast.unparse(test)
+
+    def _append_calls(stmts, guarded: bool, out: List[Finding]) -> None:
+        shielded = guarded
+        for st in stmts:
+            if isinstance(st, ast.If) and _is_emit_test(st.test):
+                _append_calls(st.body, True, out)
+                _append_calls(st.orelse, shielded, out)
+                # `if not emit: continue` shields the rest of this body
+                if st.body and isinstance(
+                        st.body[-1], (ast.Continue, ast.Break,
+                                      ast.Return, ast.Raise)):
+                    shielded = True
+                continue
+            if isinstance(st, (ast.For, ast.While)):
+                _append_calls(st.body, shielded, out)
+                _append_calls(st.orelse, shielded, out)
+                continue
+            if isinstance(st, ast.If):
+                _append_calls(st.body, shielded, out)
+                _append_calls(st.orelse, shielded, out)
+                continue
+            for node in ast.walk(st):
+                if (isinstance(node, ast.Call)
+                        and isinstance(node.func, ast.Attribute)
+                        and node.func.attr == "append"
+                        and isinstance(node.func.value, ast.Attribute)
+                        and node.func.value.attr == "tokens_out"
+                        and not shielded):
+                    out.append(Finding(
+                        PASS, "fused-emit-guard",
+                        f"{func} appends to tokens_out without consulting "
+                        f"the per-step emit mask — a finished slot's token "
+                        f"is double-counted on fused ticks",
+                        file=_rel(engine_path), line=node.lineno))
+
+    out: List[Finding] = []
+    _append_calls(f.body, False, out)
+    return out
+
+
 def run() -> List[Finding]:
     findings: List[Finding] = []
     findings += check_engine_sim_config()
@@ -371,4 +438,5 @@ def run() -> List[Finding]:
     findings += check_cluster_report()
     findings += check_router_aggregation()
     findings += check_kv_report_reads()
+    findings += check_fused_emit_guard()
     return findings

@@ -35,6 +35,7 @@ ENGINE_SIM_PAIRS = [
     ("prefix_sharing", "prefix_sharing"),
     ("placement", "placement"),
     ("placement_regions", "n_regions"),
+    ("fuse_steps", "fuse_steps"),
 ]
 
 ENGINE_ONLY_CONFIG = {
@@ -86,6 +87,8 @@ SERVING_REPORT_PAIRS = [
     ("reconfigurations", "reconfigurations"),
     ("substrate_configs", "substrate_configs"),
     ("array_util_mean", "array_util_mean"),
+    ("fused_ticks", "fused_ticks"),
+    ("fused_steps_mean", "fused_steps_mean"),
     ("makespan_s", "modeled_time_s"),     # both are the modeled clock
 ]
 
@@ -121,6 +124,8 @@ SCHEDULER_METRICS_ONLY = {
     "codesign_substrate": "echoed config, not a metric",
     "modeled_tokens_per_s": "derived from decoded_tokens / makespan_s on "
                             "the sim side",
+    "fused_host_frac": "wall-clock host/device split only exists on the "
+                       "live path",
 }
 
 # --------------------------------------------------------------------------

@@ -78,6 +78,9 @@ class ServingReport:
     makespan_s: float = 0.0         # modeled clock when the last request ends
     decoded_tokens: int = 0
     tokens_per_s: float = 0.0       # decoded_tokens / makespan_s
+    # fused decode loop mirror (fuse_steps > 1 only)
+    fused_ticks: int = 0            # boundaries that ran a k>1 horizon
+    fused_steps_mean: float = 0.0   # mean horizon length over fused ticks
 
     def normalized_to(self, base: "ServingReport") -> Tuple[float, float]:
         return (self.e2e_mean_s / base.e2e_mean_s,
@@ -283,7 +286,8 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
                      shared_prefix_len: int = 0,
                      placement: Optional[str] = None,
                      n_regions: int = 4,
-                     hw: Optional[NMPSystem] = None) -> ServingReport:
+                     hw: Optional[NMPSystem] = None,
+                     fuse_steps: int = 1) -> ServingReport:
     """Analytical serving simulation.
 
     Mirrors the real-JAX engine's two policy axes (same defaults keep the
@@ -325,6 +329,13 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
       never changes admission (spill keeps success a function of the
       global free count alone), so latency/throughput stay identical
       across policies; the gather-cost metric is what separates them.
+    * ``fuse_steps`` (paged only): mirror of the engine's fused decode
+      loop.  Each boundary picks a horizon ``k = min(fuse_steps,
+      steps-until-any-request-needs-a-new-page, min remaining decode
+      budget)`` and runs ``k`` decode iterations with no admission or
+      growth in between — exactly when the real engine's ``lax.scan``
+      keeps the host out of the loop.  ``fused_ticks`` /
+      ``fused_steps_mean`` report how often and how deep the fusion ran.
     """
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(1.0 / rate_req_s, size=n_requests)
@@ -447,6 +458,9 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
     reconfigs0 = getattr(latency, "reconfigurations", 0)
     tick_util_sum = 0.0
     tick_iters = 0
+    # fused decode-loop mirror (engine lax.scan horizons)
+    fused_ticks_n = 0
+    fused_steps_sum = 0
 
     def admit_pages(r: Request) -> bool:
         nonlocal free_pages, prefix_refs
@@ -507,6 +521,20 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
             continue
 
         decoding = [r for r in active if r.prefill_remaining == 0]
+        # --- fused multi-step horizon (engine lax.scan mirror) --------------
+        # k_h = min(fuse_steps, steps until any request crosses its page
+        # coverage after the boundary's grow-to-ctx+1, min remaining
+        # budget): no admission, growth, or finish happens mid-horizon
+        k_h = 1
+        if fuse_steps > 1 and paged and decoding:
+            caps = [max(r.pages_held + shared_full,
+                        _pages(r.ctx() + 1, page_size)) * page_size
+                    - r.ctx() for r in decoding]
+            buds = [r.output_len - r.tokens_out for r in decoding]
+            k_h = max(1, min([fuse_steps] + caps + buds))
+            if k_h > 1:
+                fused_ticks_n += 1
+                fused_steps_sum += k_h
         # --- co-scheduled on-device prefill ---------------------------------
         stall = 0.0
         step_toks = 0
@@ -532,6 +560,20 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
             it = (latency(len(decoding),
                           int(np.mean([r.ctx() for r in decoding])))
                   if decoding else 0.0)
+        # price the horizon's trailing decode-only steps (the prefill
+        # chunk rides step 0, exactly like the engine's fused tick)
+        for j in range(1, k_h):
+            if tick_step is not None:
+                d2 = tick_step(len(decoding),
+                               [r.ctx() + j for r in decoding],
+                               stream=tick_stream)
+                it += d2.decode_s + d2.reconfig_s
+                tick_util_sum += d2.util
+                tick_iters += 1
+            else:
+                it += latency(len(decoding),
+                              int(np.mean([r.ctx() + j
+                                           for r in decoding])))
         if pf is not None:
             pf.prefill_remaining -= step_toks
         clock += it + stall
@@ -571,30 +613,34 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
             conc_sum += float(np.mean(concs))
             gather_iters += 1
 
-        # --- decode token + on-demand page growth ---------------------------
+        # --- decode token(s) + on-demand page growth ------------------------
+        # k_h tokens per request per boundary; the horizon rule puts all
+        # growth at j == 0 and budget finishes exactly on the final step
         for r in decoding:
             if r not in active:     # preempted earlier in this iteration
                 continue
-            if paged:
-                need = (_pages(r.ctx() + 1, page_size)
-                        - r.pages_held - shared_full)
-                while need > free_pages:
-                    if not preempt_youngest(exclude=r):
-                        raise RuntimeError("page pool too small for one "
-                                           "request")
-                free_pages -= need
-                r.pages_held += need
-                place_private(r, need)
-            r.tokens_out += 1
-            r.token_times.append(clock)
-            if paged:               # growth may move the peak mid-iteration
-                kv_peak = max(kv_peak,
-                              (pages_cap - free_pages) * page_size)
-            if r.tokens_out >= r.output_len:
-                r.finish_s = clock
-                release(r)
-                active.remove(r)
-                done.append(r)
+            for j in range(k_h):
+                if paged:
+                    need = (_pages(r.ctx() + 1, page_size)
+                            - r.pages_held - shared_full)
+                    while need > free_pages:
+                        if not preempt_youngest(exclude=r):
+                            raise RuntimeError("page pool too small for "
+                                               "one request")
+                    free_pages -= need
+                    r.pages_held += need
+                    place_private(r, need)
+                r.tokens_out += 1
+                r.token_times.append(clock - (k_h - 1 - j) * it / k_h)
+                if paged:           # growth may move the peak mid-iteration
+                    kv_peak = max(kv_peak,
+                                  (pages_cap - free_pages) * page_size)
+                if r.tokens_out >= r.output_len:
+                    r.finish_s = r.token_times[-1]
+                    release(r)
+                    active.remove(r)
+                    done.append(r)
+                    break
 
     e2e = np.array([r.finish_s - r.arrival_s for r in done])
     tbts, ttfts = [], []
@@ -633,7 +679,10 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
                          makespan_s=clock,
                          decoded_tokens=sum(r.tokens_out for r in done),
                          tokens_per_s=(sum(r.tokens_out for r in done)
-                                       / clock if clock > 0 else 0.0))
+                                       / clock if clock > 0 else 0.0),
+                         fused_ticks=fused_ticks_n,
+                         fused_steps_mean=(fused_steps_sum / fused_ticks_n
+                                           if fused_ticks_n else 0.0))
 
 
 # ---------------------------------------------------------------------------

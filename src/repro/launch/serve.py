@@ -9,7 +9,10 @@ block-table read-through paged kernel.  ``--paged`` switches KV residency
 to the page-pool layout (``--page-size``, ``--num-pages`` to oversubscribe)
 and ``--prefill-chunk`` interleaves Sarathi prefill chunks with the hot
 decode batch (written directly into block-table pages on the paged
-engine).  ``--prefix-sharing`` adds refcounted prompt-prefix pages with
+engine).  ``--fuse-steps K`` (paged only) fuses up to K decode steps
+into one device-resident ``lax.scan`` tick — the host surfaces only at
+fusion-horizon boundaries; tokens are identical to per-tick dispatch.
+``--prefix-sharing`` adds refcounted prompt-prefix pages with
 copy-on-write; combine it with ``--shared-prefix N`` to drive a
 shared-system-prompt trace (every prompt = N common tokens + a unique
 tail) and watch the dedup ratio in the report.  ``--placement
@@ -87,6 +90,11 @@ def main():
                          "equivalent capacity to exercise preemption)")
     ap.add_argument("--prefix-sharing", action="store_true",
                     help="refcounted prompt-prefix page sharing + CoW")
+    ap.add_argument("--fuse-steps", type=int, default=1,
+                    help="decode steps fused into one device-resident "
+                         "lax.scan (1: per-tick dispatch; the realized "
+                         "horizon is clipped by page windows and decode "
+                         "budgets, so tokens are identical either way)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="common system-prompt tokens per request "
                          "(0: fully unique prompts)")
@@ -144,6 +152,11 @@ def main():
     if args.placement and not args.paged:
         ap.error("--placement requires --paged (the dense cache has no "
                  "page pool to partition)")
+    if args.fuse_steps > 1 and not args.paged:
+        ap.error("--fuse-steps requires --paged (the fused scan runs on "
+                 "the block-table decode step)")
+    if args.fuse_steps < 1:
+        ap.error("--fuse-steps must be >= 1")
     if args.codesign_rows and not args.codesign:
         ap.error("--codesign-rows requires --codesign")
     if args.reconfig_cost is not None and not args.codesign:
@@ -162,6 +175,7 @@ def main():
                         page_size=args.page_size,
                         num_pages=args.num_pages,
                         prefix_sharing=args.prefix_sharing,
+                        fuse_steps=args.fuse_steps,
                         defrag_threshold=(None if args.defrag_threshold < 0
                                           else args.defrag_threshold),
                         placement=args.placement,

@@ -361,6 +361,52 @@ def decode_step_paged(params: Params, cfg: ArchConfig, tokens: jax.Array,
     return logits, (kp, vp, lengths + 1)
 
 
+def decode_fused_paged(params: Params, cfg: ArchConfig, tokens: jax.Array,
+                       k_pool: jax.Array, v_pool: jax.Array,
+                       tables: jax.Array, lengths: jax.Array,
+                       alive: jax.Array, k_active: jax.Array,
+                       n_steps: int, tp: int = 1, attn_fn=None,
+                       eos_id: int = -1):
+    """Fuse ``n_steps`` paged decode iterations into one ``lax.scan``.
+
+    The whole multi-step loop — greedy argmax sampling, token feedback,
+    per-lane length advance, and eos freezing — stays resident on device:
+    the host sees one dispatch and one fetch per fusion horizon instead
+    of one per token.  ``n_steps`` is static (the engine buckets it to a
+    power of two to bound recompiles); ``k_active`` is the traced actual
+    horizon — steps at index >= ``k_active`` leave every lane frozen, so
+    a bucketed scan emits exactly the same tokens as an exact-length one.
+
+    A frozen lane (inactive, eos'd, or index >= ``k_active``) still runs
+    the step — its K/V write lands at its frozen length, one past its
+    valid context, on a page it exclusively owns (or the scratch page for
+    inactive lanes whose table rows are pre-masked) — but emits nothing:
+    ``emitted[j, b]`` masks the steps whose token in ``tokens_out[j, b]``
+    is real.
+
+    Returns ``(tokens_out (n_steps, B), emitted (n_steps, B), k_pool,
+    v_pool, lengths)``.
+    """
+    vocab = cfg.vocab
+
+    def step(carry, idx):
+        toks, kp, vp, ln, al = carry
+        logits, (kp, vp, _) = decode_step_paged(
+            params, cfg, toks, kp, vp, tables, ln, tp=tp, attn_fn=attn_fn)
+        nxt = jnp.argmax(logits[:, :vocab], axis=-1).astype(toks.dtype)
+        run = al & (idx < k_active)
+        toks = jnp.where(run, nxt, toks)
+        ln = jnp.where(run, ln + 1, ln)
+        if eos_id >= 0:
+            al = al & ~(run & (nxt == eos_id))
+        return (toks, kp, vp, ln, al), (toks, run)
+
+    carry = (tokens, k_pool, v_pool, lengths, alive)
+    (_, kp, vp, ln, _), (tok_seq, emit_seq) = lax.scan(
+        step, carry, jnp.arange(n_steps))
+    return tok_seq, emit_seq, kp, vp, ln
+
+
 def decode_step(params: Params, cfg: ArchConfig, tokens: jax.Array,
                 cache: KVCache, tp: int = 1,
                 attn_fn=None) -> Tuple[jax.Array, KVCache]:

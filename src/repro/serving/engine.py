@@ -48,7 +48,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -118,6 +118,13 @@ class EngineConfig:
     # (shape-profile change); None derives the pipeline fill/drain cost
     # from the substrate geometry
     codesign_reconfig_cost_s: Optional[float] = None
+    # fuse up to K decode steps into one jitted lax.scan with tokens,
+    # lengths, and eos/finish masks resident on device (paged engine
+    # only; 1 keeps the per-tick host loop).  The actual horizon each
+    # tick is min(fuse_steps, steps-until-any-slot-needs-a-new-page,
+    # min-remaining-decode-budget), so allocation and token streams stay
+    # exactly identical to the per-tick engine
+    fuse_steps: int = 1
 
 
 def _insert_slot(cache, new, slot: int):
@@ -257,8 +264,8 @@ class ServingEngine:
         t0 = time.perf_counter()
         tokens = jnp.asarray(req.prompt[None, :])
         logits, new_cache = self._prefill(self.params, tokens)
-        logits.block_until_ready()
         self._insert(slot, new_cache, len(req.prompt))
+        # argmax on device; the int() fetch is the only synchronization
         first = int(jnp.argmax(logits[0, : self.cfg.vocab]))
         self._next_tok[slot] = first
         req.slot = slot
@@ -275,10 +282,11 @@ class ServingEngine:
         self._pre_decode_grow()
         toks = jnp.asarray(self._next_tok)
         logits = self._decode_batch(toks)
-        logits.block_until_ready()
-        now = time.perf_counter()
+        # argmax on device, one host fetch per step — dispatch stays
+        # async until the sampled ids are actually needed
         nxt = np.asarray(jnp.argmax(logits[:, : self.cfg.vocab], axis=-1),
                          np.int32)
+        now = time.perf_counter()
         finished = 0
         for slot, req in list(self.active.items()):
             tok = int(nxt[slot])
@@ -331,7 +339,8 @@ class ServingEngine:
         take = min(chunk, n - st["pos"])
         toks = jnp.asarray(req.prompt[None, st["pos"]: st["pos"] + take])
         logits, st["buf"] = self._extend(self.params, toks, st["buf"])
-        logits.block_until_ready()
+        # no sync: chunks chain on device; only the final chunk's argmax
+        # (below) fetches a value at the prefill boundary
         st["pos"] += take
         st["logits"] = logits
         if st["pos"] < n:
@@ -517,6 +526,14 @@ class PagedServingEngine(ServingEngine):
         self._gather_cost_steps = 0
         self._region_peak: Dict[int, int] = {}
         self._paged_decode = None   # built lazily (pallas path)
+        # fused multi-step decode (lax.scan engine core): one jitted
+        # callable per bucketed horizon length, plus host/device wall
+        # split for the host-overhead metric
+        self._fused_jits: Dict[int, Any] = {}
+        self._fused_ticks = 0
+        self._fused_steps_sum = 0
+        self._fused_host_s = 0.0
+        self._fused_device_s = 0.0
 
     # -- capacity ------------------------------------------------------
     def _claim(self, req: RequestState) -> Optional[int]:
@@ -635,7 +652,8 @@ class PagedServingEngine(ServingEngine):
         toks = jnp.asarray(req.prompt[None, st["pos"]: st["pos"] + take])
         view = self.paged.gather_slot(slot, st["pos"])
         logits, view = self._extend(self.params, toks, view)
-        logits.block_until_ready()
+        # no sync: the scatter chains on the extend on device; only the
+        # final chunk's argmax (below) fetches a value
         self.paged.scatter_chunk(slot, view, st["pos"], take)
         st["pos"] += take
         st["logits"] = logits
@@ -778,13 +796,14 @@ class PagedServingEngine(ServingEngine):
         # a lane outside the decode batch can still have pages mapped (a
         # slot mid chunked-prefill — with sharing, possibly live *shared*
         # prefix pages): the kernel writes each lane's K/V unconditionally,
-        # so route every inactive lane's window to the scratch page
-        t = np.where(self.paged.tables < 0, self.paged.num_pages,
-                     self.paged.tables)
-        t = np.where(active[:, None], t, self.paged.num_pages)
+        # so route every inactive lane's window to the scratch page.  The
+        # table itself comes from the incrementally maintained device
+        # mirror — no per-tick numpy rebuild/upload — and the masking runs
+        # on device over that mirror
+        t = jnp.where(jnp.asarray(active)[:, None],
+                      self.paged.tables_device(), self.paged.num_pages)
         logits, (kp, vp, new_len) = self._paged_decode(
-            self.params, toks, store[ki], store[vi],
-            jnp.asarray(t, jnp.int32), lengths)
+            self.params, toks, store[ki], store[vi], t, lengths)
         store[ki], store[vi] = kp, vp
         # the lengths leaf is the only rank-1 non-seq leaf the step advances
         li = [i for i, s in enumerate(self.paged.is_seq)
@@ -794,6 +813,214 @@ class PagedServingEngine(ServingEngine):
                                  store[li[0]])
         self.paged.store = store
         return logits
+
+    # -- fused multi-step decode (device-resident lax.scan core) -------
+    def tick(self) -> int:
+        if (self.ecfg.fuse_steps <= 1 or not self.paged.has_seq
+                or self.cfg.family not in _ATTN_FAMILIES
+                or not hasattr(self.entry.module, "decode_fused_paged")):
+            return super().tick()
+        return self._fused_tick()
+
+    def _fused_horizon(self) -> int:
+        """K = min(fuse_steps, steps until any active slot crosses its
+        mapped page window, min remaining decode budget) — computed from
+        ``_lengths_host`` so nothing inside the scan ever needs a page
+        allocation, and budget finishes land exactly on the final step.
+        Token-level eos cannot be predicted from host state; those lanes
+        freeze on device instead (``emitted`` masks their tail steps)."""
+        ps = self.ecfg.page_size
+        k = self.ecfg.fuse_steps
+        for slot, req in self.active.items():
+            cap = (len(self.paged.blocks_of(slot)) * ps
+                   - int(self._lengths_host[slot]))
+            k = min(k, cap, self._budget(req) - len(req.tokens_out))
+        return max(1, k)
+
+    def _cow_horizon(self, k: int) -> None:
+        """Fork every shared page the next ``k`` writes can touch.
+        Shared pages are immutable while their refcount is > 1, so
+        forking at the horizon boundary is content-identical to forking
+        at the write step — only the fork's *timing* moves, never the
+        copied bytes.  Preempts on fork-allocation failure, exactly like
+        the per-step CoW pass."""
+        if not self.paged.share:
+            return
+        ps = self.ecfg.page_size
+        for slot in sorted(self.active):
+            if slot not in self.active:      # preempted mid-loop
+                continue
+            ln = int(self._lengths_host[slot])
+            for blk in range(ln // ps, (ln + k - 1) // ps + 1):
+                while not self.paged.cow_for_write(slot, blk * ps):
+                    victim = self._pick_victim(exclude=slot)
+                    if victim is None:
+                        raise RuntimeError(
+                            "page pool exhausted with no preemptible "
+                            "request (fused copy-on-write fork)")
+                    self._preempt(victim)
+        self._note_pages()
+
+    def _fused_fn(self, n_steps: int):
+        """Jitted K-step scan, cached per bucketed horizon length."""
+        fn = self._fused_jits.get(n_steps)
+        if fn is None:
+            mod, cfg, tp = self.entry.module, self.cfg, self.tp
+            attn_fn = None
+            if self.ecfg.use_pallas_decode:
+                from repro.kernels import ops as kops
+                attn_fn = (lambda q, kc, vc, t, ln:
+                           kops.attention_decode_paged(q, kc, vc, t, ln))
+            eos = self.ecfg.eos_id
+            fn = jax.jit(
+                lambda params, toks, kp, vp, tables, lengths, alive, ka:
+                mod.decode_fused_paged(params, cfg, toks, kp, vp, tables,
+                                       lengths, alive, ka, n_steps,
+                                       tp=tp, attn_fn=attn_fn,
+                                       eos_id=eos),
+                donate_argnums=(2, 3))
+            self._fused_jits[n_steps] = fn
+        return fn
+
+    def _fused_tick(self) -> int:
+        """One scheduler tick = one prefill chunk + a K-step fused scan.
+
+        The host surfaces only here, at the fusion-horizon boundary:
+        admission/chunk advance, page growth + preemption, CoW forks,
+        then ONE device dispatch and ONE fetch for all K tokens, then
+        finish bookkeeping.  Falls back to the per-step path when the
+        horizon degenerates to a single step."""
+        t_tick0 = time.perf_counter()
+        ecfg = self.ecfg
+        pf_tokens = pf_ctx = 0
+        if self._chunkable():
+            st = self._prefilling
+            if st is not None and self._tick_model is not None:
+                pf_tokens = min(ecfg.prefill_chunk,
+                                len(st["req"].prompt) - st["pos"])
+                pf_ctx = st["pos"] + pf_tokens
+            self._prefill_chunk_tick()
+        if not self.active:
+            self._note_tick(0, [], pf_tokens, pf_ctx)
+            return 0
+        self._pre_decode_grow()
+        k = self._fused_horizon()
+        if k <= 1:
+            if self._tick_model is not None:
+                ctxs = [len(r.prompt) + len(r.tokens_out)
+                        for r in self.active.values()]
+                self._note_tick(len(ctxs), ctxs, pf_tokens, pf_ctx)
+            return self.step()
+        self._cow_horizon(k)
+        self._note_gather_cost()     # one placement sample per fused tick
+        base_ctx = {s: len(r.prompt) + len(r.tokens_out)
+                    for s, r in self.active.items()}
+        active = np.zeros((ecfg.max_batch,), bool)
+        for s in self.active:
+            active[s] = True
+        act_dev = jnp.asarray(active)
+        lengths = jnp.asarray(np.where(active, self._lengths_host, 0),
+                              jnp.int32)
+        toks = jnp.asarray(self._next_tok)
+        # inactive lanes (mid chunked-prefill slots can hold live shared
+        # pages) route to the scratch page, on device, over the mirror
+        tables = jnp.where(act_dev[:, None], self.paged.tables_device(),
+                           self.paged.num_pages)
+        seq_idx = [i for i, s in enumerate(self.paged.is_seq) if s]
+        assert len(seq_idx) == 2, "fused decode expects k/v pools"
+        ki, vi = seq_idx
+        store = list(self.paged.store)
+        # bucket the scan length to a power of two: a handful of compiled
+        # horizons serve every K, and lanes freeze at idx >= k on device
+        n_steps = 1 << (k - 1).bit_length()
+        fn = self._fused_fn(n_steps)
+        t_dev0 = time.perf_counter()
+        tok_seq, emit_seq, kp, vp, new_len = fn(
+            self.params, toks, store[ki], store[vi], tables, lengths,
+            act_dev, jnp.asarray(k, jnp.int32))
+        tok_h = np.asarray(tok_seq)      # the single per-horizon fetch
+        emit_h = np.asarray(emit_seq)
+        t_dev1 = time.perf_counter()
+        store[ki], store[vi] = kp, vp
+        li = [i for i, s in enumerate(self.paged.is_seq)
+              if not s and store[i].ndim == 1]
+        assert len(li) == 1
+        store[li[0]] = jnp.where(act_dev, new_len, store[li[0]])
+        self.paged.store = store
+        finished = self._apply_fused(tok_h, emit_h, k, t_dev0, t_dev1)
+        if self._tick_model is not None:
+            # post-hoc per-step attribution: step j's batch is the lanes
+            # that actually ran it (eos'd lanes drop out mid-horizon, as
+            # they would tick-by-tick); the prefill chunk rides step 0
+            for j in range(k):
+                ctxs = [base_ctx[s] + j for s in base_ctx
+                        if emit_h[j, s]]
+                self._note_tick(len(ctxs), ctxs,
+                                pf_tokens if j == 0 else 0,
+                                pf_ctx if j == 0 else 0)
+        t_tick1 = time.perf_counter()
+        self._fused_ticks += 1
+        self._fused_steps_sum += k
+        dev = t_dev1 - t_dev0
+        self._fused_device_s += dev
+        self._fused_host_s += (t_tick1 - t_tick0) - dev
+        return finished
+
+    def _apply_fused(self, tok_seq: np.ndarray, emit_seq: np.ndarray,
+                     k: int, t0: float, t1: float) -> int:
+        """Host bookkeeping for one fused tick: append each lane's
+        emitted tokens, advance host lengths, retire finished requests.
+        ``emit_seq[j, slot]`` masks the steps a lane actually ran —
+        a lane frozen by an eos mid-horizon emits nothing afterwards, so
+        every append MUST stay behind the emit guard (the mirror-drift
+        checker's fused-emit-guard invariant; an unguarded append
+        double-counts the finished lane's last token)."""
+        ecfg = self.ecfg
+        times = [t0 + (j + 1) * (t1 - t0) / k for j in range(k)]
+        finished = 0
+        for slot, req in list(self.active.items()):
+            last_t = t1
+            for j in range(k):
+                if not emit_seq[j, slot]:
+                    continue
+                req.tokens_out.append(int(tok_seq[j, slot]))
+                req.token_times.append(times[j])
+                last_t = times[j]
+                self._lengths_host[slot] += 1
+            hit_eos = (ecfg.eos_id >= 0
+                       and req.tokens_out[-1] == ecfg.eos_id)
+            budget = self._budget(req)
+            if hit_eos or len(req.tokens_out) >= budget:
+                req.finish_s = last_t
+                req.finish_reason = (
+                    "eos" if (hit_eos or budget < ecfg.max_new_tokens)
+                    else "budget")
+                self.completed.append(req)
+                del self.active[slot]
+                self._release(slot)
+                finished += 1
+            else:
+                self._next_tok[slot] = req.tokens_out[-1]
+        return finished
+
+    def fused_report(self) -> dict:
+        """Fused-tick accounting ({} before any fused tick ran)."""
+        if not self._fused_ticks:
+            return {}
+        tot = self._fused_host_s + self._fused_device_s
+        return {"fused_ticks": self._fused_ticks,
+                "fused_steps_mean": (self._fused_steps_sum
+                                     / self._fused_ticks),
+                "host_frac": self._fused_host_s / tot if tot > 0 else 0.0}
+
+    def reset_fused_counters(self) -> None:
+        """Zero the fused-tick accounting — warmup-then-measure drivers
+        call this between the compile run and the timed run so the
+        report covers only the measured region."""
+        self._fused_ticks = 0
+        self._fused_steps_sum = 0
+        self._fused_host_s = 0.0
+        self._fused_device_s = 0.0
 
 
 def make_engine(entry: registry.ArchEntry, ecfg: EngineConfig,

@@ -525,6 +525,10 @@ class PagedCache:
 
     # -- block-table bookkeeping -------------------------------------------
     def _invalidate(self):
+        """Drop the device mirror entirely — only the bulk rewrites
+        (defrag / migrate / reset) pay a full rebuild; the per-slot hot
+        ops maintain the mirror incrementally via ``_mirror_row`` /
+        ``_mirror_set``."""
         self._tables_dev = None
 
     def tables_device(self) -> jax.Array:
@@ -533,6 +537,33 @@ class PagedCache:
             t = np.where(self.tables < 0, self.num_pages, self.tables)
             self._tables_dev = jnp.asarray(t, jnp.int32)
         return self._tables_dev
+
+    def _mirror_row(self, slot: int) -> None:
+        """Refresh one slot's row of the device table mirror in place
+        (alloc/extend/free touch a single row — rebuilding the whole
+        ``(B, nblk)`` table per tick was the serving loop's biggest
+        host->device transfer)."""
+        if self._tables_dev is None:
+            return
+        row = np.where(self.tables[slot] < 0, self.num_pages,
+                       self.tables[slot]).astype(np.int32)
+        self._tables_dev = self._tables_dev.at[slot].set(jnp.asarray(row))
+
+    def _mirror_set(self, slot: int, blk: int, page: int) -> None:
+        """Point one mirror entry at a new physical page (CoW fork)."""
+        if self._tables_dev is None:
+            return
+        self._tables_dev = self._tables_dev.at[slot, blk].set(page)
+
+    def mirror_consistent(self) -> bool:
+        """True iff the incrementally maintained device mirror equals a
+        fresh rebuild of the host tables.  An unbuilt mirror (None) is
+        trivially consistent.  The allocator-model checker drives a
+        scripted op sequence through this after every mutation."""
+        if self._tables_dev is None:
+            return True
+        ref = np.where(self.tables < 0, self.num_pages, self.tables)
+        return bool(np.array_equal(np.asarray(self._tables_dev), ref))
 
     def blocks_of(self, slot: int) -> List[int]:
         return [int(p) for p in self.tables[slot] if p >= 0]
@@ -625,7 +656,7 @@ class PagedCache:
         self.shared_count[slot] = len(shared)
         if self.share and tokens is not None:
             self._pending_prompt[slot] = np.asarray(tokens).copy()
-        self._invalidate()
+        self._mirror_row(slot)
         return True
 
     def _assign_home(self, slot: int) -> Optional[int]:
@@ -657,7 +688,7 @@ class PagedCache:
         if pages is None:
             return False
         self.tables[slot, have:need] = pages
-        self._invalidate()
+        self._mirror_row(slot)
         return True
 
     def free_slot(self, slot: int) -> None:
@@ -668,7 +699,7 @@ class PagedCache:
         self.shared_count[slot] = 0
         self._pending_prompt.pop(slot, None)
         self.home_region.pop(slot, None)
-        self._invalidate()
+        self._mirror_row(slot)
 
     def reset(self) -> None:
         self.alloc.reset()
@@ -725,7 +756,7 @@ class PagedCache:
             # at refcount > 1, so this should not trigger)
             self.prefix.remove(old)
         self.cow_forks += 1
-        self._invalidate()
+        self._mirror_set(slot, blk, new)
         return True
 
     # -- device ops --------------------------------------------------------

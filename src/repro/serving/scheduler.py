@@ -296,6 +296,8 @@ class Scheduler:
         kv = eng.kv_report()
         # live co-design channel ({} on engines without it, incl. stubs)
         cd = getattr(eng, "codesign_report", dict)()
+        # fused decode-loop channel ({} on per-tick / dense engines)
+        fr = getattr(eng, "fused_report", dict)()
         return {"wall_s": wall, "requests": len(eng.completed),
                 "decoded_tokens": toks,
                 # an empty / all-preempted trace can complete at wall == 0
@@ -333,4 +335,8 @@ class Scheduler:
                     if cd.get("modeled_time_s") else 0.0),
                 "reconfigurations": cd.get("reconfigurations", 0),
                 "substrate_configs": cd.get("substrate_configs", 0),
-                "array_util_mean": cd.get("array_util_mean", 0.0)}
+                "array_util_mean": cd.get("array_util_mean", 0.0),
+                # fused decode loop (EngineConfig.fuse_steps > 1 engines)
+                "fused_ticks": fr.get("fused_ticks", 0),
+                "fused_steps_mean": fr.get("fused_steps_mean", 0.0),
+                "fused_host_frac": fr.get("host_frac", 0.0)}

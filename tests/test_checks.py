@@ -76,6 +76,15 @@ def test_metrics_drift_fixture_flags_dropped_key():
     assert f.file.endswith("pr6_metrics_drift.py") and f.line > 0
 
 
+def test_fused_double_count_fixture_flagged():
+    findings = run_fixture("pr8-fused-double-count")
+    assert findings
+    assert all(f.invariant == "fused-emit-guard" for f in findings)
+    f = findings[0]
+    assert f.file.endswith("pr8_fused_double_count.py") and f.line > 0
+    assert "_apply_fused" in f.message
+
+
 def test_stale_contract_entries_are_findings(monkeypatch):
     """The contract file itself is checked: an entry naming a metric
     that no longer exists must surface, not rot silently."""
@@ -103,4 +112,5 @@ def test_cli_rejects_unknown_fixture():
     with pytest.raises(SystemExit):
         checks_main(["--fixture", "no-such-fixture"])
     assert set(FIXTURE_NAMES) == {"pr2-scatter-clip", "pr2-inactive-lane",
-                                  "pr2-refcount-free", "pr6-metrics-drift"}
+                                  "pr2-refcount-free", "pr6-metrics-drift",
+                                  "pr8-fused-double-count"}
