@@ -10,6 +10,8 @@ it (the serving sweeps) and runs the rest at full size — the single CI
 entry point replacing the old per-benchmark workflow steps.  Prints
 ``name,us_per_call,derived[,paper=..][,note]`` CSV rows and dumps raw
 results to ``benchmarks/out/<module>.json`` (uploaded as CI artifacts).
+A run summary — per-module wall time, ``ok``/``error`` status, and row
+count — lands in ``benchmarks/out/summary.json``.
 Exit code = number of failed modules.
 """
 from __future__ import annotations
@@ -17,10 +19,12 @@ from __future__ import annotations
 import argparse
 import importlib
 import inspect
+import json
+import os
 import time
 import traceback
 
-from benchmarks.common import emit
+from benchmarks.common import OUT_DIR, emit
 
 MODULES = [
     "fig1_roofline",       # Fig. 1a/b  roofline + Stratum execution split
@@ -49,23 +53,34 @@ def main() -> int:
                     help="reduced sweeps where supported (CI entry point)")
     args = ap.parse_args()
     failures = 0
+    summary = {"smoke": args.smoke, "modules": {}}
     for name in MODULES:
         if args.modules and not any(name.startswith(o)
                                     for o in args.modules):
             continue
+        t0 = time.time()
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
             kwargs = {}
             if args.smoke and "smoke" in \
                     inspect.signature(mod.run).parameters:
                 kwargs["smoke"] = True
-            t0 = time.time()
             rows = mod.run(**kwargs)
             emit(name, rows, time.time() - t0)
+            summary["modules"][name] = {"status": "ok",
+                                        "wall_s": time.time() - t0,
+                                        "rows": len(rows)}
         except Exception:
             failures += 1
             print(f"{name},0,NaN,ERROR")
             traceback.print_exc()
+            summary["modules"][name] = {"status": "error",
+                                        "wall_s": time.time() - t0,
+                                        "rows": 0}
+    summary["failures"] = failures
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, "summary.json"), "w") as f:
+        json.dump(summary, f, indent=1)
     return failures
 
 

@@ -16,11 +16,17 @@ behind the front-end router and dispatches a 2-group multi-tenant trace
 under ``--policy`` — ``prefix_affinity`` keeps each group's pages on one
 replica, so the aggregate dedup compounds instead of fragmenting.
 
+``--fuse-steps K`` fuses up to K decode steps per device-resident tick
+and ``--trace-out FILE`` records a Perfetto timeline of any of the runs
+(plus a lossless ``.jsonl`` event log and a printed phase report).
+
   PYTHONPATH=src python examples/serve_decode.py
   PYTHONPATH=src python examples/serve_decode.py --pallas --paged
   PYTHONPATH=src python examples/serve_decode.py --paged --share
   PYTHONPATH=src python examples/serve_decode.py --share --replicas 2 \
       --policy prefix_affinity
+  PYTHONPATH=src python examples/serve_decode.py --share --fuse-steps 4 \
+      --trace-out /tmp/serve.trace.json
 """
 import argparse
 
@@ -31,13 +37,37 @@ from repro.serving.engine import (EngineConfig, make_engine,
 from repro.serving.router import POLICIES, make_cluster
 
 
+def _make_tracer(args):
+    if not args.trace_out:
+        return None
+    from repro.obs import Tracer
+    return Tracer()
+
+
+def _dump_trace(tracer, args):
+    if tracer is None:
+        return
+    from repro.obs import export_perfetto, save_jsonl, trace_report
+    export_perfetto(tracer.events, args.trace_out)
+    save_jsonl(tracer.events, args.trace_out + ".jsonl")
+    rep = trace_report(tracer.events)
+    print(f"[serve_decode] trace: {len(tracer.events)} events -> "
+          f"{args.trace_out}")
+    print(f"[serve_decode] phases: {rep['phases']} "
+          f"makespan={rep['makespan_s']:.3f}s")
+
+
 def run_cluster(args):
     entry = registry.get("yi-6b", reduced=True)
     ecfg = EngineConfig(max_batch=4, max_seq=64, max_new_tokens=12,
                         use_pallas_decode=args.pallas, paged=True,
                         page_size=16, prefix_sharing=True,
+                        fuse_steps=args.fuse_steps,
                         prefill_chunk=args.prefill_chunk)
     router = make_cluster(entry, ecfg, args.replicas, policy=args.policy)
+    tracer = _make_tracer(args)
+    if tracer is not None:
+        router.set_tracer(tracer)
     reqs = make_grouped_prefix_trace(entry.config.vocab,
                                      rate_req_s=args.rate,
                                      n_requests=args.n_requests,
@@ -53,6 +83,7 @@ def run_cluster(args):
         print(f"[serve_decode]   replica {rep['replica']}: "
               f"{rep['requests']} reqs  {rep['decoded_tokens']} toks  "
               f"dedup x{rep['dedup_ratio_peak']:.2f}")
+    _dump_trace(tracer, args)
 
 
 def main():
@@ -63,28 +94,42 @@ def main():
                     help="prefix sharing on a shared-prompt trace "
                          "(implies --paged)")
     ap.add_argument("--prefill-chunk", type=int, default=None)
+    ap.add_argument("--fuse-steps", type=int, default=1,
+                    help="decode steps fused per device-resident tick "
+                         "(needs --paged or --share)")
     ap.add_argument("--n-requests", type=int, default=10)
     ap.add_argument("--rate", type=float, default=6.0)
     ap.add_argument("--replicas", type=int, default=1,
                     help="with --share: replicas behind the router")
     ap.add_argument("--policy", choices=POLICIES, default="prefix_affinity")
+    ap.add_argument("--trace-out", type=str, default=None,
+                    help="write a Perfetto timeline (+ .jsonl event log) "
+                         "of the run")
     args = ap.parse_args()
     if args.replicas > 1 and not args.share:
         ap.error("--replicas needs --share (the router demo drives a "
                  "grouped shared-prefix trace)")
+    if args.fuse_steps > 1 and not (args.paged or args.share):
+        ap.error("--fuse-steps needs --paged or --share (the fused scan "
+                 "runs on the block-table decode step)")
 
     if args.share and args.replicas > 1:
         run_cluster(args)
         return
 
-    for arch in ("yi-6b", "rwkv6-7b"):
+    tracer = _make_tracer(args)
+    for replica, arch in enumerate(("yi-6b", "rwkv6-7b")):
         entry = registry.get(arch, reduced=True)
         ecfg = EngineConfig(max_batch=4, max_seq=64, max_new_tokens=12,
                             use_pallas_decode=args.pallas,
                             paged=args.paged or args.share, page_size=16,
                             prefix_sharing=args.share,
+                            fuse_steps=(args.fuse_steps
+                                        if args.paged or args.share else 1),
                             prefill_chunk=args.prefill_chunk)
         eng = make_engine(entry, ecfg)
+        if tracer is not None:
+            eng.set_tracer(tracer, replica=replica)
         if args.share:
             reqs = make_shared_prefix_trace(entry.config.vocab,
                                             rate_req_s=args.rate,
@@ -101,6 +146,7 @@ def main():
               f"TBT mean {m['tbt_mean_s'] * 1e3:.1f}ms "
               f"p99 {m['tbt_p99_s'] * 1e3:.1f}ms  "
               f"kv={m['kv_mode']} peak {m['kv_peak_tokens']} tok{extra}")
+    _dump_trace(tracer, args)
 
 
 if __name__ == "__main__":

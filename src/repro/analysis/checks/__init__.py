@@ -89,12 +89,19 @@ def _fx_fused_double_count(log=None) -> List[Finding]:
         engine_path=str(_FIXDIR / "pr8_fused_double_count.py"))
 
 
+def _fx_metrics_unregistered(log=None) -> List[Finding]:
+    from . import mirror_drift
+    return mirror_drift.check_metrics_registered(
+        sched_path=str(_FIXDIR / "pr9_metrics_unregistered.py"))
+
+
 FIXTURES = {
     "pr2-scatter-clip": _fx_scatter_clip,
     "pr2-inactive-lane": _fx_inactive_lane,
     "pr2-refcount-free": _fx_refcount_free,
     "pr6-metrics-drift": _fx_metrics_drift,
     "pr8-fused-double-count": _fx_fused_double_count,
+    "pr9-metrics-unregistered": _fx_metrics_unregistered,
 }
 FIXTURE_NAMES = tuple(sorted(FIXTURES))
 

@@ -431,6 +431,49 @@ def check_fused_emit_guard(engine_path: Optional[str] = None,
     return out
 
 
+def check_metrics_registered(sched_path: Optional[str] = None,
+                             router_path: Optional[str] = None,
+                             sched_cls: str = "Scheduler",
+                             router_cls: str = "Router") -> List[Finding]:
+    """Every key ``Scheduler.metrics`` / ``Router.metrics`` emits must be
+    declared in the metric-name contract next to the registry
+    (``repro.obs.metrics``), and — for the real modules — every declared
+    name must still be emitted.  The PR-9 drift class: a scheduler grows
+    a metric the registry (and its exporters/dashboards) never learn
+    about, or a rename leaves a dead name in the contract.
+
+    Fixture paths check the *unregistered* direction only, so a minimal
+    fixture class need not re-emit the whole contract.
+    """
+    out: List[Finding] = []
+    for path, dflt_mod, cls, contract, label in (
+            (sched_path, "repro.serving.scheduler", sched_cls,
+             SPEC.SCHEDULER_METRIC_CONTRACT, "SCHEDULER_METRIC_CONTRACT"),
+            (router_path, "repro.serving.router", router_cls,
+             SPEC.ROUTER_METRIC_CONTRACT, "ROUTER_METRIC_CONTRACT")):
+        is_real = path is None
+        if path is None and sched_path is None and router_path is None:
+            path = module_path(dflt_mod)
+        elif path is None:
+            continue                # fixture run: only the given side
+        emitted = produced_keys(path, cls, "metrics")
+        for k, ln in emitted.items():
+            if k not in contract:
+                out.append(Finding(
+                    PASS, "unregistered-metric",
+                    f"{cls}.metrics emits '{k}' but {label} does not "
+                    f"declare it — register the metric name in "
+                    f"repro.obs.metrics", file=_rel(path), line=ln))
+        if is_real:
+            for k in contract:
+                if k not in emitted:
+                    out.append(Finding(
+                        PASS, "stale-contract",
+                        f"{label} declares '{k}' but {cls}.metrics no "
+                        f"longer emits it", file=_rel(path)))
+    return out
+
+
 def run() -> List[Finding]:
     findings: List[Finding] = []
     findings += check_engine_sim_config()
@@ -439,4 +482,5 @@ def run() -> List[Finding]:
     findings += check_router_aggregation()
     findings += check_kv_report_reads()
     findings += check_fused_emit_guard()
+    findings += check_metrics_registered()
     return findings

@@ -21,6 +21,12 @@ Three kinds of entry:
 """
 from __future__ import annotations
 
+# The metric-name contracts themselves live next to the registry that
+# produces them (PR 9); re-exported here so the checker has one spec
+# module to import
+from repro.obs.metrics import (ROUTER_METRIC_CONTRACT,       # noqa: F401
+                               SCHEDULER_METRIC_CONTRACT)
+
 # --------------------------------------------------------------------------
 # EngineConfig (serving/engine.py)  <->  simulate_serving kwargs
 # (core/serving_sim.py)
@@ -66,6 +72,8 @@ SIM_ONLY_PARAMS = {
     "prefill_on_device": "sim-only switch for pricing prefill off-device",
     "hw": "NMP system object for gather pricing; the engine wires it "
           "through the paged cache",
+    "tracer": "the engine attaches its tracer via set_tracer, not a "
+              "config knob",
 }
 
 # --------------------------------------------------------------------------
@@ -126,6 +134,8 @@ SCHEDULER_METRICS_ONLY = {
                             "the sim side",
     "fused_host_frac": "wall-clock host/device split only exists on the "
                        "live path",
+    "hists": "bucketed distribution summaries from the live metrics "
+             "registry; the sim reports scalar statistics",
 }
 
 # --------------------------------------------------------------------------
@@ -162,6 +172,8 @@ ROUTER_METRICS_ONLY = {
     "modeled_tokens_per_s": "live cluster only: the sim clock IS the "
                             "modeled clock",
     "per_replica": "live-path breakdown table",
+    "hists": "bucketed distribution summaries from the live metrics "
+             "registry; the sim reports scalar statistics",
 }
 
 # --------------------------------------------------------------------------

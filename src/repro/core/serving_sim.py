@@ -287,7 +287,8 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
                      placement: Optional[str] = None,
                      n_regions: int = 4,
                      hw: Optional[NMPSystem] = None,
-                     fuse_steps: int = 1) -> ServingReport:
+                     fuse_steps: int = 1,
+                     tracer=None) -> ServingReport:
     """Analytical serving simulation.
 
     Mirrors the real-JAX engine's two policy axes (same defaults keep the
@@ -336,13 +337,26 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
       growth in between — exactly when the real engine's ``lax.scan``
       keeps the host out of the loop.  ``fused_ticks`` /
       ``fused_steps_mean`` report how often and how deep the fusion ran.
+    * ``tracer``: an :class:`repro.obs.tracer.Tracer` (construct with
+      ``t0=0.0``) receiving the same event schema the live engine emits,
+      with timestamps on the *modeled* clock — admissions, prefill
+      chunks, decode/fused-tick spans (reconfiguration charge split into
+      its own ``reconfigure`` event so spans stay disjoint), preemptions,
+      and finishes.  ``None`` (the default) traces nothing and the
+      report is bit-identical either way.
     """
+    from repro.obs.tracer import NULL_TRACER
+    tr = NULL_TRACER if tracer is None else tracer
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(1.0 / rate_req_s, size=n_requests)
     arrivals = np.cumsum(gaps)
     reqs = [Request(i, float(arrivals[i]), input_len, output_len,
                     prefill_remaining=input_len if prefill_on_device else 0)
             for i in range(n_requests)]
+    if tr.enabled:
+        for r in reqs:
+            tr.emit("arrival", rid=r.rid, ts=r.arrival_s,
+                    arrival_s=r.arrival_s, prompt_len=r.input_len)
 
     t_pf = _prefill_time(spec, input_len)
     if not prefill_on_device:
@@ -492,6 +506,8 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
                 if prefix_refs == 0:    # last holder frees the prefix
                     free_pages += shared_full
 
+    preempted_rids: set = set()
+
     def preempt_youngest(exclude: Request) -> bool:
         nonlocal preemptions
         cands = [r for r in active
@@ -510,12 +526,20 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
         pending.append(victim)
         pending.sort(key=ready_time)
         preemptions += 1
+        if tr.enabled:
+            preempted_rids.add(victim.rid)
+            tr.emit("preempt", rid=victim.rid, ts=clock,
+                    preemptions=preemptions)
         return True
 
     while len(done) < n_requests:
         while pending and ready_time(pending[0]) <= clock \
                 and len(active) < max_batch and admit_pages(pending[0]):
-            active.append(pending.pop(0))
+            r_adm = pending.pop(0)
+            active.append(r_adm)
+            if tr.enabled:
+                tr.emit("admit", rid=r_adm.rid, ts=clock,
+                        requeued=r_adm.rid in preempted_rids)
         if not active:
             clock = max(clock, ready_time(pending[0]))
             continue
@@ -526,17 +550,25 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
         # coverage after the boundary's grow-to-ctx+1, min remaining
         # budget): no admission, growth, or finish happens mid-horizon
         k_h = 1
+        k_clamp = "fuse_steps"
         if fuse_steps > 1 and paged and decoding:
             caps = [max(r.pages_held + shared_full,
                         _pages(r.ctx() + 1, page_size)) * page_size
                     - r.ctx() for r in decoding]
             buds = [r.output_len - r.tokens_out for r in decoding]
             k_h = max(1, min([fuse_steps] + caps + buds))
+            if tr.enabled:
+                # same strict-< cascade as the engine's _fused_horizon
+                if min(caps) < fuse_steps:
+                    k_clamp = "page_edge"
+                if min(buds) < min([fuse_steps] + caps):
+                    k_clamp = "budget"
             if k_h > 1:
                 fused_ticks_n += 1
                 fused_steps_sum += k_h
         # --- co-scheduled on-device prefill ---------------------------------
         stall = 0.0
+        rc_s = 0.0                  # reconfiguration charge this tick
         step_toks = 0
         pf = next((r for r in active if r.prefill_remaining > 0), None)
         if pf is not None:
@@ -552,6 +584,7 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
                                          + step_toks) if pf else 0,
                             stream=tick_stream)
             it, stall = dec.decode_s + dec.reconfig_s, dec.prefill_s
+            rc_s = dec.reconfig_s
             tick_util_sum += dec.util
             tick_iters += 1
         else:
@@ -568,6 +601,7 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
                                [r.ctx() + j for r in decoding],
                                stream=tick_stream)
                 it += d2.decode_s + d2.reconfig_s
+                rc_s += d2.reconfig_s
                 tick_util_sum += d2.util
                 tick_iters += 1
             else:
@@ -577,6 +611,28 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
         if pf is not None:
             pf.prefill_remaining -= step_toks
         clock += it + stall
+        if tr.enabled:
+            # disjoint modeled-clock spans: prefill chunk, then the
+            # reconfiguration charge, then the decode work — per tick
+            # they sum to exactly `it + stall`
+            t_tick0 = clock - it - stall
+            if pf is not None and step_toks:
+                tr.emit("prefill_chunk", ts=t_tick0, dur=stall,
+                        rid=pf.rid, tokens=step_toks,
+                        pos=(pf.input_len - pf.prefill_remaining
+                             - step_toks),
+                        last=pf.prefill_remaining == 0)
+            if rc_s > 0:
+                tr.emit("reconfigure", ts=t_tick0 + stall, dur=rc_s,
+                        modeled_reconfig_s=rc_s)
+            if decoding:
+                if k_h > 1:
+                    tr.emit("fused_tick", ts=t_tick0 + stall + rc_s,
+                            dur=it - rc_s, batch=len(decoding),
+                            horizon=k_h, clamp=k_clamp)
+                else:
+                    tr.emit("decode_step", ts=t_tick0 + stall + rc_s,
+                            dur=it - rc_s, batch=len(decoding))
         if decoding:                # stall only counts against hot decode
             max_stall = max(max_stall, stall)
         if pf is not None and pf.prefill_remaining == 0:
@@ -637,6 +693,9 @@ def simulate_serving(latency: DecodeLatencyModel, spec: ModelSpec,
                                   (pages_cap - free_pages) * page_size)
                 if r.tokens_out >= r.output_len:
                     r.finish_s = r.token_times[-1]
+                    if tr.enabled:
+                        tr.emit("finish", rid=r.rid, ts=r.finish_s,
+                                reason="budget", tokens=r.tokens_out)
                     release(r)
                     active.remove(r)
                     done.append(r)
@@ -737,7 +796,7 @@ class _Replica:
 
     def __init__(self, latency: DecodeLatencyModel, spec: ModelSpec,
                  max_batch: int, pages_cap: int, page_size: int,
-                 shared_full: int):
+                 shared_full: int, tracer=None):
         self.latency = latency
         self.spec = spec
         self.max_batch = max_batch
@@ -759,6 +818,11 @@ class _Replica:
         self._tick_stream = object()
         self.tick_util_sum = 0.0
         self.tick_iters = 0
+        if tracer is None:
+            from repro.obs.tracer import NULL_TRACER
+            tracer = NULL_TRACER
+        self.tracer = tracer
+        self._preempted_rids: set = set()
 
     # -- load signals read by the dispatch policy ----------------------
     def load(self) -> Tuple[int, int]:
@@ -805,6 +869,10 @@ class _Replica:
         self.queue.append(victim)
         self.queue.sort(key=lambda q: (q.prefill_done_s, q.rid))
         self.preemptions += 1
+        if self.tracer.enabled:
+            self._preempted_rids.add(victim.rid)
+            self.tracer.emit("preempt", rid=victim.rid, ts=self.clock,
+                             preemptions=self.preemptions)
         return True
 
     def enqueue(self, r: Request) -> None:
@@ -831,15 +899,22 @@ class _Replica:
         while self.queue and self.queue[0].prefill_done_s <= self.clock \
                 and len(self.active) < self.max_batch \
                 and self._admit(self.queue[0]):
-            self.active.append(self.queue.pop(0))
+            r_adm = self.queue.pop(0)
+            self.active.append(r_adm)
+            if self.tracer.enabled:
+                self.tracer.emit(
+                    "admit", rid=r_adm.rid, ts=self.clock,
+                    requeued=r_adm.rid in self._preempted_rids)
         if not self.active:
             return False
         tick_step = getattr(self.latency, "step", None)
+        rc_s = 0.0
         if tick_step is not None:
             dec = tick_step(len(self.active),
                             [r.ctx() for r in self.active],
                             stream=self._tick_stream)
             it = dec.time_s + dec.reconfig_s
+            rc_s = dec.reconfig_s
             self.tick_util_sum += dec.util
             self.tick_iters += 1
         else:
@@ -848,6 +923,12 @@ class _Replica:
                                            for r in self.active])))
         self.clock += it
         self.busy_s += it
+        if self.tracer.enabled:
+            if rc_s > 0:
+                self.tracer.emit("reconfigure", ts=self.clock - it,
+                                 dur=rc_s, modeled_reconfig_s=rc_s)
+            self.tracer.emit("decode_step", ts=self.clock - it + rc_s,
+                             dur=it - rc_s, batch=len(self.active))
         self._note_peaks()
         for r in list(self.active):
             if r not in self.active:    # preempted mid-iteration
@@ -864,6 +945,9 @@ class _Replica:
             r.token_times.append(self.clock)
             if r.tokens_out >= r.output_len:
                 r.finish_s = self.clock
+                if self.tracer.enabled:
+                    self.tracer.emit("finish", rid=r.rid, ts=self.clock,
+                                     reason="budget", tokens=r.tokens_out)
                 self._release(r)
                 self.active.remove(r)
                 self.done.append(r)
@@ -899,8 +983,8 @@ def simulate_cluster(latency: DecodeLatencyModel, spec: ModelSpec,
                      prefix_sharing: bool = False,
                      shared_prefix_len: int = 0, n_groups: int = 4,
                      skew: float = 1.0,
-                     trace: Optional[List[Request]] = None
-                     ) -> ClusterReport:
+                     trace: Optional[List[Request]] = None,
+                     tracer=None) -> ClusterReport:
     """Analytical mirror of ``serving/router.py``: N independent paged
     decode replicas behind one dispatch policy.
 
@@ -943,7 +1027,10 @@ def simulate_cluster(latency: DecodeLatencyModel, spec: ModelSpec,
     if shared_prefix_len > min(r.input_len for r in trace):
         raise ValueError("shared_prefix_len exceeds a trace prompt")
     reps = [_Replica(latency, spec, max_batch, pages_cap, page_size,
-                     shared_full) for _ in range(n_replicas)]
+                     shared_full,
+                     tracer=(tracer.for_replica(i) if tracer is not None
+                             else None))
+            for i in range(n_replicas)]
     reconfigs0 = getattr(latency, "reconfigurations", 0)
 
     rr = 0
@@ -980,6 +1067,9 @@ def simulate_cluster(latency: DecodeLatencyModel, spec: ModelSpec,
             rep.advance_to(req.arrival_s)
         i = select(req)
         hints[req.group] = i
+        if tracer is not None and tracer.enabled:
+            tracer.emit("dispatch", replica=i, rid=req.rid,
+                        ts=req.arrival_s, policy=policy)
         reps[i].enqueue(req)
     for rep in reps:
         rep.run_to_completion()

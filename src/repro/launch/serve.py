@@ -142,6 +142,12 @@ def main():
     ap.add_argument("--trace-file", type=str, default=None,
                     help="replay a recorded JSON trace "
                          "(serving.scheduler.load_trace format)")
+    ap.add_argument("--trace-out", type=str, default=None,
+                    metavar="PERFETTO_JSON",
+                    help="write a Perfetto/chrome-trace timeline of the "
+                         "run (open at https://ui.perfetto.dev); a "
+                         "lossless .jsonl event log is written next to "
+                         "it and the phase-attribution report is printed")
     args = ap.parse_args()
     if args.prefix_sharing and not args.paged:
         ap.error("--prefix-sharing requires --paged (the dense engine "
@@ -184,9 +190,15 @@ def main():
                         codesign_rows=args.codesign_rows,
                         codesign_reconfig_cost_s=args.reconfig_cost)
     reqs = build_trace(args, entry.config.vocab)
+    tracer = None
+    if args.trace_out:
+        from repro.obs import Tracer
+        tracer = Tracer()
     if args.replicas > 1:
         router = make_cluster(entry, ecfg, args.replicas,
                               policy=args.router_policy)
+        if tracer is not None:
+            router.set_tracer(tracer)
         metrics = router.run_trace(reqs)
         per = metrics.pop("per_replica")
         print(f"[serve] {args.arch} x{args.replicas} "
@@ -195,8 +207,20 @@ def main():
             print(f"[serve]   replica {rep['replica']}: {rep}")
     else:
         eng = make_engine(entry, ecfg)
+        if tracer is not None:
+            eng.set_tracer(tracer)
         metrics = eng.run_trace(reqs)
         print(f"[serve] {args.arch}: {metrics}")
+    if tracer is not None:
+        from repro.obs import export_perfetto, save_jsonl, trace_report
+        export_perfetto(tracer.events, args.trace_out)
+        jsonl = args.trace_out + ".jsonl"
+        save_jsonl(tracer.events, jsonl)
+        rep = trace_report(tracer.events)
+        print(f"[serve] trace: {len(tracer.events)} events -> "
+              f"{args.trace_out} (+ {jsonl})")
+        print(f"[serve] phases: {rep['phases']} "
+              f"makespan={rep['makespan_s']:.3f}s")
 
 
 if __name__ == "__main__":

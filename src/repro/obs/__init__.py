@@ -1,0 +1,26 @@
+"""Serving-wide observability: tracing, metrics, exporters (PR 9).
+
+* :mod:`repro.obs.tracer` — typed lifecycle events + the no-op
+  :data:`NULL_TRACER` the hot path defaults to;
+* :mod:`repro.obs.metrics` — counters / gauges / fixed-bucket
+  histograms, the shared :func:`pctl` quantile helper, and the
+  metric-name contracts the mirror-drift checker enforces;
+* :mod:`repro.obs.export` — Perfetto JSON, JSONL save/replay,
+  :func:`trace_report` phase attribution.
+"""
+from repro.obs.export import (export_perfetto, load_jsonl, save_jsonl,
+                              trace_report)
+from repro.obs.metrics import (DEFAULT_BUCKETS, Counter, Gauge, Histogram,
+                               MetricsRegistry, ROUTER_METRIC_CONTRACT,
+                               SCHEDULER_METRIC_CONTRACT, pctl,
+                               serving_registry)
+from repro.obs.tracer import (EVENT_KINDS, NULL_TRACER, NullTracer,
+                              TraceEvent, Tracer)
+
+__all__ = [
+    "EVENT_KINDS", "NULL_TRACER", "NullTracer", "TraceEvent", "Tracer",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "DEFAULT_BUCKETS",
+    "SCHEDULER_METRIC_CONTRACT", "ROUTER_METRIC_CONTRACT", "pctl",
+    "serving_registry", "export_perfetto", "save_jsonl", "load_jsonl",
+    "trace_report",
+]

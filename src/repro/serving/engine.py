@@ -55,6 +55,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import registry
+from repro.obs.tracer import NULL_TRACER
 from repro.serving.paged_cache import PagedCache, num_blocks
 # re-exported for back-compat: these lived here before the scheduling
 # loop was extracted into serving/scheduler.py
@@ -154,6 +155,10 @@ class ServingEngine:
         self.preemption_count = 0
         self.requeue: List[RequestState] = []   # preempted, awaiting re-admit
         self._prefilling: Optional[dict] = None   # chunk-scheduler state
+        # lifecycle tracing (repro.obs): NULL_TRACER keeps the hot path
+        # branch-cheap; set_tracer swaps in a recording tracer.  Tracing
+        # only reads state, so tokens are bit-identical either way.
+        self.tracer = NULL_TRACER
         self._init_cache()
         self._init_codesign()
 
@@ -195,6 +200,11 @@ class ServingEngine:
         else:
             self._extend = None
         self._next_tok = np.zeros((ecfg.max_batch,), np.int32)
+
+    def set_tracer(self, tracer, replica: int = 0) -> None:
+        """Attach an ``obs.tracer`` Tracer; this replica's events carry
+        ``replica`` as their Perfetto process id."""
+        self.tracer = tracer.for_replica(replica)
 
     # -- cache backend hooks (overridden by PagedServingEngine) ------------
     def _init_cache(self):
@@ -251,6 +261,10 @@ class ServingEngine:
                 "eos" if (hit_eos or budget < self.ecfg.max_new_tokens)
                 else "budget")
             self.completed.append(req)
+            if self.tracer.enabled:
+                self.tracer.emit("finish", ts=req.finish_s, slot=slot,
+                                 rid=req.rid, reason=req.finish_reason,
+                                 tokens=len(req.tokens_out))
             self._release(slot)
             return
         self.active[slot] = req
@@ -272,6 +286,12 @@ class ServingEngine:
         req.prefill_done_s = time.perf_counter() - t0
         req.first_token_s = time.perf_counter()
         req.tokens_out.append(first)
+        if self.tracer.enabled:
+            # whole-prompt prefill is one maximal "chunk"
+            self.tracer.emit("prefill_chunk", ts=t0,
+                             dur=req.first_token_s - t0, slot=slot,
+                             rid=req.rid, tokens=len(req.prompt),
+                             pos=len(req.prompt), last=True)
         self._activate(slot, req)
         return True
 
@@ -279,6 +299,8 @@ class ServingEngine:
         """One decode iteration for all active slots; returns #finished."""
         if not self.active:
             return 0
+        t_step0 = time.perf_counter() if self.tracer.enabled else 0.0
+        batch0 = len(self.active)
         self._pre_decode_grow()
         toks = jnp.asarray(self._next_tok)
         logits = self._decode_batch(toks)
@@ -303,11 +325,19 @@ class ServingEngine:
                               or budget < self.ecfg.max_new_tokens)
                     else "budget")
                 self.completed.append(req)
+                if self.tracer.enabled:
+                    self.tracer.emit("finish", ts=now, slot=slot,
+                                     rid=req.rid,
+                                     reason=req.finish_reason,
+                                     tokens=len(req.tokens_out))
                 del self.active[slot]
                 self._release(slot)
                 finished += 1
             else:
                 self._next_tok[slot] = tok
+        if self.tracer.enabled:
+            self.tracer.emit("decode_step", ts=t_step0, dur=now - t_step0,
+                             batch=batch0, finished=finished)
         return finished
 
     # -- Sarathi chunk scheduler ---------------------------------------
@@ -334,6 +364,8 @@ class ServingEngine:
         st = self._prefilling
         if st is None:
             return False
+        tr = self.tracer
+        t_ck0 = time.perf_counter() if tr.enabled else 0.0
         req, chunk = st["req"], self.ecfg.prefill_chunk
         n = len(req.prompt)
         take = min(chunk, n - st["pos"])
@@ -344,6 +376,11 @@ class ServingEngine:
         st["pos"] += take
         st["logits"] = logits
         if st["pos"] < n:
+            if tr.enabled:
+                tr.emit("prefill_chunk", ts=t_ck0,
+                        dur=time.perf_counter() - t_ck0, slot=st["slot"],
+                        rid=req.rid, tokens=take, pos=st["pos"],
+                        last=False)
             return False
         # prompt fully consumed: move the buffer into the slot
         slot = st["slot"]
@@ -354,6 +391,10 @@ class ServingEngine:
         req.prefill_done_s = time.perf_counter() - st["t0"]
         req.first_token_s = time.perf_counter()
         req.tokens_out.append(first)
+        if tr.enabled:
+            tr.emit("prefill_chunk", ts=t_ck0,
+                    dur=req.first_token_s - t_ck0, slot=slot, rid=req.rid,
+                    tokens=take, pos=n, last=True)
         self._activate(slot, req)
         self._prefilling = None
         return True
@@ -393,11 +434,19 @@ class ServingEngine:
         """Price this tick's actual composition on the modeled substrate."""
         if self._tick_model is None or not (batch or pf_tokens):
             return
+        prev = (self._tick_model._last_shapes.get(0)
+                if self.tracer.enabled else None)
         d = self._tick_model.step(batch, ctxs, prefill_tokens=pf_tokens,
                                   prefill_ctx=pf_ctx)
         self.modeled_time_s += d.time_s + d.reconfig_s
         self._tick_util_sum += d.util
         self._tick_steps += 1
+        if prev is not None and prev != d.shapes:
+            # instantaneous on the wall clock; the modeled charge rides
+            # in args (the sims charge dur on their own clock instead)
+            self.tracer.emit("reconfigure", old=str(prev),
+                             new=str(d.shapes),
+                             modeled_reconfig_s=d.reconfig_s)
 
     def codesign_report(self) -> dict:
         """Substrate decisions accumulated over the run ({} when off)."""
@@ -428,7 +477,21 @@ class ServingEngine:
             ctxs = [len(r.prompt) + len(r.tokens_out)
                     for r in self.active.values()]
             self._note_tick(len(ctxs), ctxs, pf_tokens, pf_ctx)
-        return self.step()
+        n_fin = self.step()
+        if self.tracer.enabled:
+            self._trace_gauges()
+        return n_fin
+
+    def _trace_gauges(self) -> None:
+        """One ``gauge`` event per tick (tracing only): each args key
+        becomes a Perfetto counter track."""
+        args = {"active": len(self.active),
+                "free_slots": len(self.free_slots)}
+        if self._tick_model is not None and self.modeled_time_s > 0:
+            toks = (sum(len(r.tokens_out) for r in self.completed)
+                    + sum(len(r.tokens_out) for r in self.active.values()))
+            args["modeled_tokens_per_s"] = toks / self.modeled_time_s
+        self.tracer.emit("gauge", **args)
 
     def busy(self) -> bool:
         return bool(self.active) or self._prefilling is not None
@@ -524,6 +587,9 @@ class PagedServingEngine(ServingEngine):
         self._gather_cost_sum = 0.0
         self._gather_conc_sum = 0.0
         self._gather_cost_steps = 0
+        # per-iteration gather-cost samples (obs histogram source; one
+        # float per decode iteration under a placement map)
+        self.gather_cost_samples: List[float] = []
         self._region_peak: Dict[int, int] = {}
         self._paged_decode = None   # built lazily (pallas path)
         # fused multi-step decode (lax.scan engine core): one jitted
@@ -534,6 +600,14 @@ class PagedServingEngine(ServingEngine):
         self._fused_steps_sum = 0
         self._fused_host_s = 0.0
         self._fused_device_s = 0.0
+        # realized horizons (obs histogram source) and the constraint
+        # that clamped the most recent one (fused_tick trace events)
+        self.fused_horizons: List[int] = []
+        self._last_horizon_clamp = "fuse_steps"
+
+    def set_tracer(self, tracer, replica: int = 0) -> None:
+        super().set_tracer(tracer, replica)
+        self.paged.tracer = self.tracer   # CoW / defrag / migrate events
 
     # -- capacity ------------------------------------------------------
     def _claim(self, req: RequestState) -> Optional[int]:
@@ -593,6 +667,7 @@ class PagedServingEngine(ServingEngine):
         self._gather_cost_sum += cost
         self._gather_conc_sum += conc
         self._gather_cost_steps += 1
+        self.gather_cost_samples.append(cost)
 
     def load_report(self) -> dict:
         rep = super().load_report()
@@ -646,6 +721,8 @@ class PagedServingEngine(ServingEngine):
         st = self._prefilling
         if st is None or not st.get("direct"):
             return super()._prefill_chunk_tick()
+        tr = self.tracer
+        t_ck0 = time.perf_counter() if tr.enabled else 0.0
         req, chunk, slot = st["req"], self.ecfg.prefill_chunk, st["slot"]
         n = len(req.prompt)
         take = min(chunk, n - st["pos"])
@@ -658,6 +735,11 @@ class PagedServingEngine(ServingEngine):
         st["pos"] += take
         st["logits"] = logits
         if st["pos"] < n:
+            if tr.enabled:
+                tr.emit("prefill_chunk", ts=t_ck0,
+                        dur=time.perf_counter() - t_ck0, slot=slot,
+                        rid=req.rid, tokens=take, pos=st["pos"],
+                        last=False)
             return False
         # prompt fully consumed: publish prefix pages, activate the slot
         self.paged.commit_prefix(slot)
@@ -669,6 +751,10 @@ class PagedServingEngine(ServingEngine):
         req.prefill_done_s = time.perf_counter() - st["t0"]
         req.first_token_s = time.perf_counter()
         req.tokens_out.append(first)
+        if tr.enabled:
+            tr.emit("prefill_chunk", ts=t_ck0,
+                    dur=req.first_token_s - t_ck0, slot=slot, rid=req.rid,
+                    tokens=take, pos=n, last=True)
         self._activate(slot, req)
         self._prefilling = None
         return True
@@ -708,6 +794,9 @@ class PagedServingEngine(ServingEngine):
     def _pre_decode_grow(self) -> None:
         """Grow every active slot to cover the token this step writes;
         preempt the youngest request when the pool runs dry."""
+        tr = self.tracer
+        pages0 = (self.paged.pages_in_use()
+                  if tr.enabled and self.paged.has_seq else 0)
         for slot in sorted(self.active):
             if slot not in self.active:      # preempted mid-loop
                 continue
@@ -739,6 +828,10 @@ class PagedServingEngine(ServingEngine):
                             "request (copy-on-write fork)")
                     self._preempt(victim)
         self._note_pages()
+        if tr.enabled and self.paged.has_seq:
+            grown = self.paged.pages_in_use() - pages0
+            if grown > 0:
+                tr.emit("grow", pages=grown)
 
     def _pick_victim(self, exclude: int) -> Optional[int]:
         cands = [s for s in self.active if s != exclude]
@@ -750,6 +843,9 @@ class PagedServingEngine(ServingEngine):
 
     def _preempt(self, slot: int) -> None:
         req = self.active.pop(slot)
+        if self.tracer.enabled:
+            self.tracer.emit("preempt", slot=slot, rid=req.rid,
+                             preemptions=req.preemptions + 1)
         self._release(slot)
         req.reset_generation()
         req.preemptions += 1
@@ -831,10 +927,16 @@ class PagedServingEngine(ServingEngine):
         freeze on device instead (``emitted`` masks their tail steps)."""
         ps = self.ecfg.page_size
         k = self.ecfg.fuse_steps
+        clamp = "fuse_steps"            # which constraint set the horizon
         for slot, req in self.active.items():
             cap = (len(self.paged.blocks_of(slot)) * ps
                    - int(self._lengths_host[slot]))
-            k = min(k, cap, self._budget(req) - len(req.tokens_out))
+            if cap < k:
+                k, clamp = cap, "page_edge"
+            bud = self._budget(req) - len(req.tokens_out)
+            if bud < k:
+                k, clamp = bud, "budget"
+        self._last_horizon_clamp = clamp
         return max(1, k)
 
     def _cow_horizon(self, k: int) -> None:
@@ -900,8 +1002,11 @@ class PagedServingEngine(ServingEngine):
                                 len(st["req"].prompt) - st["pos"])
                 pf_ctx = st["pos"] + pf_tokens
             self._prefill_chunk_tick()
+        t_dec0 = time.perf_counter() if self.tracer.enabled else 0.0
         if not self.active:
             self._note_tick(0, [], pf_tokens, pf_ctx)
+            if self.tracer.enabled:
+                self._trace_gauges()
             return 0
         self._pre_decode_grow()
         k = self._fused_horizon()
@@ -910,7 +1015,10 @@ class PagedServingEngine(ServingEngine):
                 ctxs = [len(r.prompt) + len(r.tokens_out)
                         for r in self.active.values()]
                 self._note_tick(len(ctxs), ctxs, pf_tokens, pf_ctx)
-            return self.step()
+            n_fin = self.step()
+            if self.tracer.enabled:
+                self._trace_gauges()
+            return n_fin
         self._cow_horizon(k)
         self._note_gather_cost()     # one placement sample per fused tick
         base_ctx = {s: len(r.prompt) + len(r.tokens_out)
@@ -961,10 +1069,35 @@ class PagedServingEngine(ServingEngine):
         t_tick1 = time.perf_counter()
         self._fused_ticks += 1
         self._fused_steps_sum += k
+        self.fused_horizons.append(k)
         dev = t_dev1 - t_dev0
         self._fused_device_s += dev
         self._fused_host_s += (t_tick1 - t_tick0) - dev
+        if self.tracer.enabled:
+            # the span starts after the co-scheduled prefill chunk so
+            # prefill/decode phases stay disjoint in trace_report
+            self.tracer.emit("fused_tick", ts=t_dec0,
+                             dur=t_tick1 - t_dec0, batch=len(base_ctx),
+                             horizon=k, clamp=self._last_horizon_clamp,
+                             device_s=dev, finished=finished)
+            self._trace_gauges()
         return finished
+
+    def _trace_gauges(self) -> None:
+        args = {"active": len(self.active),
+                "free_slots": len(self.free_slots)}
+        if self.paged.has_seq:
+            args["free_pages"] = self.paged.alloc.free_pages
+            if self.paged.placement is not None:
+                free = self.paged.alloc.region_free()
+                slot_free = [free[r] for r in free if r >= 0]
+                if slot_free:
+                    args["min_region_free"] = min(slot_free)
+        if self._tick_model is not None and self.modeled_time_s > 0:
+            toks = (sum(len(r.tokens_out) for r in self.completed)
+                    + sum(len(r.tokens_out) for r in self.active.values()))
+            args["modeled_tokens_per_s"] = toks / self.modeled_time_s
+        self.tracer.emit("gauge", **args)
 
     def _apply_fused(self, tok_seq: np.ndarray, emit_seq: np.ndarray,
                      k: int, t0: float, t1: float) -> int:
@@ -996,6 +1129,11 @@ class PagedServingEngine(ServingEngine):
                     "eos" if (hit_eos or budget < ecfg.max_new_tokens)
                     else "budget")
                 self.completed.append(req)
+                if self.tracer.enabled:
+                    self.tracer.emit("finish", ts=last_t, slot=slot,
+                                     rid=req.rid,
+                                     reason=req.finish_reason,
+                                     tokens=len(req.tokens_out))
                 del self.active[slot]
                 self._release(slot)
                 finished += 1
@@ -1021,6 +1159,7 @@ class PagedServingEngine(ServingEngine):
         self._fused_steps_sum = 0
         self._fused_host_s = 0.0
         self._fused_device_s = 0.0
+        self.fused_horizons = []
 
 
 def make_engine(entry: registry.ArchEntry, ecfg: EngineConfig,

@@ -50,6 +50,7 @@ from repro.core.gemm import ceil_div
 from repro.core.noc import page_gather
 from repro.core.placement import (COMMUNAL, PLACEMENT_POLICIES, GatherCost,
                                   PlacementMap, default_system, gather_cost)
+from repro.obs.tracer import NULL_TRACER
 
 
 # ---------------------------------------------------------------------------
@@ -522,6 +523,9 @@ class PagedCache:
         self.migrated_pages = 0
         self.migration_cost_s = 0.0
         self._bytes_per_page: Optional[int] = None
+        # lifecycle-event sink; the engine rebinds this to its own
+        # (replica-bound) tracer when one is attached
+        self.tracer = NULL_TRACER
 
     # -- block-table bookkeeping -------------------------------------------
     def _invalidate(self):
@@ -756,6 +760,9 @@ class PagedCache:
             # at refcount > 1, so this should not trigger)
             self.prefix.remove(old)
         self.cow_forks += 1
+        if self.tracer.enabled:
+            self.tracer.emit("cow_fork", slot=slot,
+                             blk=blk, old_page=old, new_page=new)
         self._mirror_set(slot, blk, new)
         return True
 
@@ -951,6 +958,9 @@ class PagedCache:
                 0, moved * self.bytes_per_page(), moved)
             self.migrated_pages += moved
             self.migration_cost_s += cost.time_s
+            if self.tracer.enabled:
+                self.tracer.emit("migrate", pages=moved,
+                                 cost_s=cost.time_s)
             self._invalidate()
         return moved
 
@@ -1009,6 +1019,10 @@ class PagedCache:
                                ).astype(np.int32)
         self.alloc.rebuild({mapping[p]: self.alloc.refcount(p)
                             for p in live})
+        if self.tracer.enabled:
+            self.tracer.emit(
+                "defrag", live_pages=len(live),
+                moved=sum(1 for o, n in mapping.items() if o != n))
         if self.prefix is not None:
             self.prefix.remap(mapping)
             # region-constrained targets must keep the trie consistent:

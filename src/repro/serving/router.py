@@ -34,6 +34,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs.metrics import serving_registry
+from repro.obs.tracer import NULL_TRACER
 from repro.serving.scheduler import RequestState, Scheduler
 
 POLICIES = ("round_robin", "least_loaded", "session_affinity",
@@ -63,6 +65,16 @@ class Router:
         self._prefix_hint: Dict[bytes, int] = {}
         # (rid, replica) in dispatch order — deterministic policy audit
         self.dispatch_log: List[Tuple[int, int]] = []
+        self._tracer = NULL_TRACER
+
+    def set_tracer(self, tracer) -> None:
+        """Attach one shared tracer: replica ``i``'s engine gets the
+        ``for_replica(i)`` view (its Perfetto process id); the router's
+        own dispatch events carry the chosen replica."""
+        self._tracer = tracer
+        for i, eng in enumerate(self.engines):
+            if hasattr(eng, "set_tracer"):
+                eng.set_tracer(tracer, replica=i)
 
     # -- policy --------------------------------------------------------
     def _load_score(self, i: int) -> Tuple[int, int, int, int]:
@@ -116,6 +128,9 @@ class Router:
         if self.policy == "prefix_affinity":   # only reader of the hints
             self._prefix_hint[self._prefix_key(req.prompt)] = i
         self.dispatch_log.append((req.rid, i))
+        if self._tracer.enabled:
+            self._tracer.emit("dispatch", replica=i, rid=req.rid,
+                              policy=self.policy)
         self.schedulers[i].enqueue(req)
         return i
 
@@ -181,13 +196,17 @@ class Router:
                 "dedup_ratio_peak": m["kv_dedup_ratio_peak"],
                 "tokens_per_s": m["decoded_tokens"] / max(1e-9, wall)})
             all_done.extend(eng.completed)
-        e2e = np.array([r.finish_s - t0 - r.arrival_s for r in all_done]
-                       ) if all_done else np.zeros(0)
+        e2e = [r.finish_s - t0 - r.arrival_s for r in all_done]
         tbts = []
         for r in all_done:
             if len(r.token_times) > 1:
                 tbts.extend(np.diff(r.token_times))
         toks = sum(len(r.tokens_out) for r in all_done)
+        # same single-producer registry as Scheduler.metrics: exact
+        # samples behind the bucketed summaries, identical statistics
+        reg = serving_registry()
+        e2e_h = reg.observe_all("e2e_s", e2e)
+        tbt_h = reg.observe_all("tpot_s", tbts)
         return {
             "policy": self.policy,
             "replicas": len(self.engines),
@@ -195,10 +214,10 @@ class Router:
             "requests": len(all_done),
             "decoded_tokens": toks,
             "tokens_per_s": toks / wall if wall > 0 else 0.0,
-            "e2e_p50_s": float(np.percentile(e2e, 50)) if len(e2e) else 0.0,
-            "e2e_p99_s": float(np.percentile(e2e, 99)) if len(e2e) else 0.0,
-            "tbt_mean_s": float(np.mean(tbts)) if tbts else 0.0,
-            "tbt_p99_s": float(np.percentile(tbts, 99)) if tbts else 0.0,
+            "e2e_p50_s": e2e_h.quantile(50),
+            "e2e_p99_s": e2e_h.quantile(99),
+            "tbt_mean_s": tbt_h.mean,
+            "tbt_p99_s": tbt_h.quantile(99),
             "preemptions": sum(e.preemption_count for e in self.engines),
             "finish_eos": sum(1 for r in all_done
                               if r.finish_reason == "eos"),
@@ -212,6 +231,8 @@ class Router:
             "modeled_tokens_per_s": modeled_rate,
             "array_util_mean": util_sum / util_n if util_n else 0.0,
             "per_replica": per_replica,
+            # bucketed cluster-level distribution summaries (live only)
+            "hists": reg.summaries()["histograms"],
         }
 
 

@@ -36,6 +36,9 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.obs.metrics import serving_registry
+from repro.obs.tracer import NULL_TRACER
+
 
 @dataclass
 class RequestState:
@@ -236,10 +239,21 @@ class Scheduler:
         self.engine = engine
         self.pending: List[RequestState] = []
 
+    @property
+    def tracer(self):
+        """The engine's (replica-bound) tracer; stub engines used by the
+        policy unit tests don't carry one, so fall back to the null."""
+        return getattr(self.engine, "tracer", NULL_TRACER)
+
     # -- incremental interface (used by the router) --------------------
     def enqueue(self, reqs) -> None:
         if isinstance(reqs, RequestState):
             reqs = [reqs]
+        tracer = self.tracer
+        if tracer.enabled:
+            for r in reqs:
+                tracer.emit("arrival", rid=r.rid, arrival_s=r.arrival_s,
+                            prompt_len=len(r.prompt))
         self.pending.extend(reqs)
         self.pending.sort(key=lambda r: (r.arrival_s, r.rid))
 
@@ -256,15 +270,22 @@ class Scheduler:
         preempted requests first, admit arrived pending requests, then
         advance the replica (one prefill chunk + one decode step)."""
         eng = self.engine
+        tracer = self.tracer
         while eng.requeue:          # preempted requests re-enter first
             if not eng.admit(eng.requeue[0]):
                 break
-            eng.requeue.pop(0)
+            r = eng.requeue.pop(0)
+            if tracer.enabled:
+                tracer.emit("admit", rid=r.rid, slot=r.slot,
+                            requeued=True)
         while self.pending and self.pending[0].arrival_s <= now \
                 and not eng.requeue:
             if not eng.admit(self.pending[0]):
                 break
-            self.pending.pop(0)
+            r = self.pending.pop(0)
+            if tracer.enabled:
+                tracer.emit("admit", rid=r.rid, slot=r.slot,
+                            requeued=False)
         return eng.tick()
 
     # -- standalone trace loop ------------------------------------------
@@ -298,17 +319,34 @@ class Scheduler:
         cd = getattr(eng, "codesign_report", dict)()
         # fused decode-loop channel ({} on per-tick / dense engines)
         fr = getattr(eng, "fused_report", dict)()
+        # single producer for every statistical value below: histograms
+        # retain the exact samples, so mean/quantile match the old inline
+        # np.mean/np.percentile math bit-for-bit
+        reg = serving_registry()
+        tbt_h = reg.observe_all("tpot_s", tbts)
+        ttft_h = reg.observe_all("ttft_s", ttfts)
+        reg.observe_all("gather_cost_s",
+                        getattr(eng, "gather_cost_samples", []))
+        reg.observe_all("fused_horizon",
+                        getattr(eng, "fused_horizons", []))
+        reg.counter("requests").inc(len(eng.completed))
+        reg.counter("decoded_tokens").inc(toks)
+        reg.counter("preemptions").inc(eng.preemption_count)
+        reg.counter("finish_eos").inc(
+            sum(1 for x in reasons if x == "eos"))
+        reg.counter("finish_budget").inc(
+            sum(1 for x in reasons if x == "budget"))
         return {"wall_s": wall, "requests": len(eng.completed),
                 "decoded_tokens": toks,
                 # an empty / all-preempted trace can complete at wall == 0
                 "tokens_per_s": toks / wall if wall > 0 else 0.0,
-                "tbt_mean_s": float(np.mean(tbts)) if tbts else 0.0,
-                "tbt_p99_s": float(np.percentile(tbts, 99)) if tbts else 0.0,
-                "ttft_mean_s": float(np.mean(ttfts)) if ttfts else 0.0,
-                "tpot_mean_s": float(np.mean(tbts)) if tbts else 0.0,
-                "preemptions": eng.preemption_count,
-                "finish_eos": sum(1 for x in reasons if x == "eos"),
-                "finish_budget": sum(1 for x in reasons if x == "budget"),
+                "tbt_mean_s": tbt_h.mean,
+                "tbt_p99_s": tbt_h.quantile(99),
+                "ttft_mean_s": ttft_h.mean,
+                "tpot_mean_s": tbt_h.mean,
+                "preemptions": reg.counter("preemptions").value,
+                "finish_eos": reg.counter("finish_eos").value,
+                "finish_budget": reg.counter("finish_budget").value,
                 "kv_mode": kv["mode"],
                 "kv_reserved_tokens": kv["reserved_tokens"],
                 "kv_peak_tokens": kv["peak_tokens"],
@@ -339,4 +377,7 @@ class Scheduler:
                 # fused decode loop (EngineConfig.fuse_steps > 1 engines)
                 "fused_ticks": fr.get("fused_ticks", 0),
                 "fused_steps_mean": fr.get("fused_steps_mean", 0.0),
-                "fused_host_frac": fr.get("host_frac", 0.0)}
+                "fused_host_frac": fr.get("host_frac", 0.0),
+                # bucketed distribution summaries (live path only — the
+                # analytic mirrors report scalar stats, not samples)
+                "hists": reg.summaries()["histograms"]}

@@ -85,6 +85,29 @@ def test_fused_double_count_fixture_flagged():
     assert "_apply_fused" in f.message
 
 
+def test_metrics_unregistered_fixture_flagged():
+    findings = run_fixture("pr9-metrics-unregistered")
+    assert findings
+    assert all(f.invariant == "unregistered-metric" for f in findings)
+    f = findings[0]
+    assert "decode_watts" in f.message
+    assert f.file.endswith("pr9_metrics_unregistered.py") and f.line > 0
+
+
+def test_metric_contract_clean_and_stale_entry_flagged(monkeypatch):
+    """The real Scheduler/Router surfaces match the metric-name contract
+    exactly; a contract entry without an emitter is a stale-contract
+    finding."""
+    from repro.analysis.checks import mirror_drift, mirror_spec
+    assert mirror_drift.check_metrics_registered() == []
+    monkeypatch.setattr(
+        mirror_spec, "SCHEDULER_METRIC_CONTRACT",
+        tuple(mirror_spec.SCHEDULER_METRIC_CONTRACT) + ("decode_watts",))
+    findings = mirror_drift.check_metrics_registered()
+    assert any(f.invariant == "stale-contract"
+               and "decode_watts" in f.message for f in findings)
+
+
 def test_stale_contract_entries_are_findings(monkeypatch):
     """The contract file itself is checked: an entry naming a metric
     that no longer exists must surface, not rot silently."""
@@ -113,4 +136,5 @@ def test_cli_rejects_unknown_fixture():
         checks_main(["--fixture", "no-such-fixture"])
     assert set(FIXTURE_NAMES) == {"pr2-scatter-clip", "pr2-inactive-lane",
                                   "pr2-refcount-free", "pr6-metrics-drift",
-                                  "pr8-fused-double-count"}
+                                  "pr8-fused-double-count",
+                                  "pr9-metrics-unregistered"}

@@ -1,0 +1,223 @@
+"""Observability subsystem tests (PR 9).
+
+The contract under test: tracing must be *free* when off and *lossless*
+when on.  Tokens and finish reasons are bit-identical with the tracer
+attached or not (engine and analytic sims); the Perfetto export
+round-trips through ``json`` with monotone per-track timestamps; a
+replayed JSONL log reproduces ``trace_report`` exactly; and the metrics
+registry reports numbers identical to the legacy ad-hoc numpy math it
+replaced (it retains exact samples alongside the bucket counts).
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.hw import snake_system
+from repro.core.operators import PAPER_MODELS
+from repro.core.serving_sim import (nmp_latency_model, simulate_cluster,
+                                    simulate_serving)
+from repro.models import registry
+from repro.obs import (EVENT_KINDS, NULL_TRACER, Histogram, MetricsRegistry,
+                       TraceEvent, Tracer, export_perfetto, load_jsonl,
+                       pctl, save_jsonl, serving_registry, trace_report)
+
+
+# ---------------------------------------------------------------------------
+# metrics registry: the shared percentile helper + exact-sample histograms
+# ---------------------------------------------------------------------------
+def test_pctl_matches_numpy_and_handles_empty():
+    xs = [0.3, 0.1, 4.0, 2.2, 0.9]
+    for q in (50, 90, 99):
+        assert pctl(xs, q) == float(np.percentile(xs, q))
+    assert pctl([], 99) == 0.0
+
+
+def test_histogram_buckets_and_exact_stats():
+    h = Histogram("lat", buckets=[0.01, 0.1, 1.0])
+    samples = [0.005, 0.01, 0.05, 0.5, 2.0, 7.0]
+    for v in samples:
+        h.observe(v)
+    s = h.summary()
+    # le semantics: 0.01 lands in the first bucket, overflow catches >1.0
+    assert s["buckets"] == {"le_0.01": 2, "le_0.1": 1, "le_1": 1, "inf": 2}
+    assert s["count"] == len(samples)
+    # stats come from the retained exact samples, not the buckets
+    assert h.mean == float(np.mean(samples))
+    assert h.quantile(99) == float(np.percentile(samples, 99))
+    with pytest.raises(ValueError):
+        Histogram("empty", buckets=[])
+
+
+def test_registry_get_or_create_and_summaries():
+    reg = MetricsRegistry()
+    assert reg.counter("reqs") is reg.counter("reqs")
+    reg.counter("reqs").inc(3)
+    reg.gauge("free_pages").set(7.0)
+    h = reg.observe_all("ttft_s", [0.1, 0.2])   # default buckets by name
+    assert h is reg.histogram("ttft_s") and h.count == 2
+    with pytest.raises(ValueError):
+        reg.histogram("no_default_buckets_for_this")
+    s = reg.summaries()
+    assert s["counters"] == {"reqs": 3}
+    assert s["gauges"] == {"free_pages": 7.0}
+    assert set(s["histograms"]) == {"ttft_s"}
+    # the serving registry pre-declares every serving instrument
+    assert set(serving_registry().histograms) == {
+        "ttft_s", "tpot_s", "gather_cost_s", "fused_horizon", "e2e_s"}
+
+
+# ---------------------------------------------------------------------------
+# tracer core: no-op default, typed kinds, lazy wall-clock origin
+# ---------------------------------------------------------------------------
+def test_null_tracer_is_inert():
+    assert NULL_TRACER.enabled is False
+    assert NULL_TRACER.emit("finish", rid=1, reason="eos") is None
+    assert NULL_TRACER.events == []
+    assert NULL_TRACER.for_replica(3) is NULL_TRACER
+
+
+def test_tracer_rejects_unknown_kind_and_anchors_origin():
+    tr = Tracer()
+    with pytest.raises(ValueError):
+        tr.emit("made_up_kind")
+    tr.emit("arrival", rid=0, arrival_s=0.5)      # wall ts, lazy t0
+    tr.emit("finish", rid=0, reason="budget")
+    assert [e.kind for e in tr.events] == ["arrival", "finish"]
+    assert tr.events[0].ts == 0.0                 # origin = first event
+    assert tr.events[1].ts >= 0.0
+    # modeled-clock tracers pass ts explicitly against t0=0
+    tm = Tracer(t0=0.0)
+    tm.emit("decode_step", ts=1.25, dur=0.5, batch=4)
+    assert tm.events[0].ts == 1.25 and tm.events[0].dur == 0.5
+
+
+def test_bound_tracer_stamps_replica():
+    tr = Tracer(t0=0.0)
+    tr.for_replica(2).emit("dispatch", ts=0.0, rid=7, policy="round_robin")
+    tr.emit("dispatch", ts=0.1, rid=8, policy="round_robin")
+    assert [e.replica for e in tr.events] == [2, 0]
+    assert all(e.kind in EVENT_KINDS for e in tr.events)
+
+
+# ---------------------------------------------------------------------------
+# sims: tracing must not perturb the report; spans partition the makespan
+# ---------------------------------------------------------------------------
+def _sim(tracer=None):
+    lat = nmp_latency_model(snake_system(), PAPER_MODELS["LLaMA3-70B"],
+                            tp=8)
+    return simulate_serving(lat, PAPER_MODELS["LLaMA3-70B"], 0.5,
+                            system="SNAKE", n_requests=8, input_len=256,
+                            output_len=48, max_batch=4,
+                            cache_mode="paged", page_size=16,
+                            prefill_on_device=True, prefill_chunk=64,
+                            fuse_steps=8, tracer=tracer)
+
+
+def test_sim_report_identical_with_and_without_tracer():
+    r0 = _sim(tracer=None)
+    tr = Tracer(t0=0.0)
+    r1 = _sim(tracer=tr)
+    assert dataclasses.asdict(r0) == dataclasses.asdict(r1)
+    kinds = {e.kind for e in tr.events}
+    assert {"arrival", "admit", "prefill_chunk", "fused_tick",
+            "finish"} <= kinds
+
+
+def test_sim_phases_sum_to_makespan():
+    tr = Tracer(t0=0.0)
+    _sim(tracer=tr)
+    rep = trace_report(tr.events)
+    assert rep["finished"] == 8
+    total = sum(rep["phases"].values())
+    assert abs(total - rep["makespan_s"]) <= 1e-9 * max(1.0, total)
+
+
+def test_cluster_sim_traced_and_unperturbed():
+    lat = nmp_latency_model(snake_system(), PAPER_MODELS["LLaMA3-70B"],
+                            tp=8)
+    kw = dict(policy="round_robin", n_replicas=2, n_requests=8,
+              input_len=256, output_len=32, max_batch=4,
+              prefix_sharing=True, shared_prefix_len=128, n_groups=2)
+    r0 = simulate_cluster(lat, PAPER_MODELS["LLaMA3-70B"], 0.5, **kw)
+    tr = Tracer(t0=0.0)
+    r1 = simulate_cluster(lat, PAPER_MODELS["LLaMA3-70B"], 0.5,
+                          tracer=tr, **kw)
+    assert dataclasses.asdict(r0) == dataclasses.asdict(r1)
+    dispatches = [e for e in tr.events if e.kind == "dispatch"]
+    assert len(dispatches) == 8
+    assert {e.replica for e in tr.events} == {0, 1}
+
+
+# ---------------------------------------------------------------------------
+# exporters: Perfetto JSON round-trip, lossless JSONL replay
+# ---------------------------------------------------------------------------
+def test_perfetto_roundtrip_monotone_tracks(tmp_path):
+    tr = Tracer(t0=0.0)
+    _sim(tracer=tr)
+    path = tmp_path / "trace.json"
+    obj = export_perfetto(tr.events, str(path))
+    # the written file and the returned object are the same JSON document
+    loaded = json.loads(path.read_text())
+    assert loaded == json.loads(json.dumps(obj))
+    evs = loaded["traceEvents"]
+    assert any(e["ph"] == "X" for e in evs)
+    assert any(e["ph"] == "M" and e["name"] == "process_name" for e in evs)
+    last = {}
+    for e in evs:
+        if e["ph"] not in ("X", "C"):
+            continue
+        key = (e["pid"], e["tid"])
+        assert e["ts"] >= last.get(key, float("-inf")), \
+            f"track {key} timestamps regressed"
+        last[key] = e["ts"]
+
+
+def test_jsonl_replay_reproduces_trace_report(tmp_path):
+    tr = Tracer(t0=0.0)
+    _sim(tracer=tr)
+    path = tmp_path / "trace.jsonl"
+    save_jsonl(tr.events, str(path))
+    replayed = load_jsonl(str(path))
+    assert replayed == tr.events                  # lossless, field-exact
+    assert trace_report(replayed) == trace_report(tr.events)
+    assert all(isinstance(e, TraceEvent) for e in replayed)
+
+
+# ---------------------------------------------------------------------------
+# live engine: tokens + finish reasons bit-identical, tracer on or off
+# ---------------------------------------------------------------------------
+def _engine_run(tracer=None):
+    from repro.serving.engine import (EngineConfig, make_engine,
+                                      make_shared_prefix_trace)
+    entry = registry.get("yi-6b", reduced=True)
+    ecfg = EngineConfig(max_batch=3, max_seq=64, max_new_tokens=4,
+                        paged=True, page_size=8, prefix_sharing=True,
+                        prefill_chunk=4, fuse_steps=4)
+    eng = make_engine(entry, ecfg)
+    if tracer is not None:
+        eng.set_tracer(tracer, replica=0)
+    reqs = make_shared_prefix_trace(entry.config.vocab, rate_req_s=500.0,
+                                    n_requests=4, prefix_len=16,
+                                    tail_len=5, seed=2)
+    m = eng.run_trace(reqs)
+    toks = {r.rid: list(r.tokens_out) for r in eng.completed}
+    reasons = {r.rid: r.finish_reason for r in eng.completed}
+    return m, toks, reasons
+
+
+def test_engine_tokens_bit_identical_tracer_on_off():
+    _, base_t, base_r = _engine_run(tracer=None)
+    tr = Tracer()
+    m, toks, reasons = _engine_run(tracer=tr)
+    assert toks == base_t and reasons == base_r
+    kinds = {e.kind for e in tr.events}
+    assert {"arrival", "admit", "prefill_chunk", "fused_tick",
+            "finish", "gauge"} <= kinds
+    # the registry's bucketed summaries ride along in the metrics dict
+    assert m["hists"]["fused_horizon"]["count"] == m["fused_ticks"]
+    rep = trace_report(tr.events)
+    assert rep["finished"] == len(base_t)
+    total = sum(rep["phases"].values())
+    assert abs(total - rep["makespan_s"]) <= 1e-9 * max(1.0, total)
