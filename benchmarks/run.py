@@ -42,6 +42,7 @@ MODULES = [
     "serving_placement",   # stack-aware page placement (gather-cost sweep)
     "serving_codesign",    # per-tick shape/dataflow co-design vs fixed SAs
     "serving_fused",       # fused decode loop: fusion horizon x batch sweep
+    "serving_disagg",      # prefill/decode tiers + page shipping vs colocated
 ]
 
 

@@ -95,6 +95,13 @@ def _fx_metrics_unregistered(log=None) -> List[Finding]:
         sched_path=str(_FIXDIR / "pr9_metrics_unregistered.py"))
 
 
+def _fx_ship_trie_drop(log=None) -> List[Finding]:
+    from . import allocator_model
+    from .fixtures import pr10_ship_trie_drop as fx
+    return allocator_model.check_ship_integrity(
+        cache_cls=fx.TrieDroppingCache, log=log)
+
+
 FIXTURES = {
     "pr2-scatter-clip": _fx_scatter_clip,
     "pr2-inactive-lane": _fx_inactive_lane,
@@ -102,6 +109,7 @@ FIXTURES = {
     "pr6-metrics-drift": _fx_metrics_drift,
     "pr8-fused-double-count": _fx_fused_double_count,
     "pr9-metrics-unregistered": _fx_metrics_unregistered,
+    "pr10-ship-trie-drop": _fx_ship_trie_drop,
 }
 FIXTURE_NAMES = tuple(sorted(FIXTURES))
 

@@ -455,12 +455,120 @@ def check_table_mirror(log: Optional[Callable[[str], None]] = None
     return findings
 
 
+def check_ship_integrity(cache_cls=None,
+                         log: Optional[Callable[[str], None]] = None
+                         ) -> List[Finding]:
+    """The ship op (PR 10), driven on two real ``PagedCache`` pools.
+
+    A page shipment must leave BOTH allocators and BOTH prefix tries in
+    a state indistinguishable from the request having prefilled on the
+    destination: the source frees every exported page, the destination's
+    refcount ledger balances, the shipped prefix coverage is
+    re-registered in the destination trie (so a follow-up import of the
+    same prefix dedups against it), and the device table mirrors stay
+    consistent on both sides.
+    """
+    import jax.numpy as jnp
+    import inspect
+    from repro.serving.paged_cache import PagedCache
+
+    cache_cls = cache_cls or PagedCache
+
+    class _Entry:
+        """Minimal cache-bearing model stub: one layer, one KV head."""
+
+        def cache_zeros(self, max_batch, max_seq, tp=1):
+            return {"k": jnp.zeros((1, max_batch, max_seq, 1, 2),
+                                   jnp.float32),
+                    "v": jnp.zeros((1, max_batch, max_seq, 1, 2),
+                                   jnp.float32),
+                    "lengths": jnp.zeros((max_batch,), jnp.int32)}
+
+    entry = _Entry()
+    kw = dict(max_batch=3, max_seq=8, page_size=2, num_pages=6,
+              share=True)
+    src = cache_cls(entry, **kw)
+    dst = cache_cls(entry, **kw)
+    src_file = inspect.getsourcefile(cache_cls)
+    findings: List[Finding] = []
+    t0 = time.time()
+
+    def bad(msg):
+        findings.append(Finding(PASS, "ship-integrity", msg,
+                                file=src_file))
+        return findings
+
+    toks = np.arange(6, dtype=np.int64)
+    src.alloc_slot(0, 6, tokens=toks)
+    src.write_slot(0, entry.cache_zeros(1, 6), 6)
+    src.commit_prefix(0)
+    ship = src.export_slot_pages(0, 6, tokens=toks, hops=1)
+    if ship.n_pages != 3:
+        return bad(f"export of 6 tokens at page_size=2 shipped "
+                   f"{ship.n_pages} pages, expected 3")
+    if ship.cost_s <= 0.0 or ship.bytes_on_wire <= 0:
+        return bad("shipment is not priced: cost_s="
+                   f"{ship.cost_s}, bytes={ship.bytes_on_wire}")
+    if src.alloc.used_pages != 0 or src.alloc.free_pages != 6:
+        return bad(f"source pool leaked after export: "
+                   f"{src.alloc.used_pages} used, "
+                   f"{src.alloc.free_pages} free (expected 0/6)")
+    if not src.mirror_consistent():
+        return bad("source device-table mirror diverged after export")
+    if not dst.import_slot_pages(0, ship):
+        return bad("import refused with an empty destination pool")
+    if dst.alloc.used_pages != 3 or dst.alloc.free_pages != 3:
+        return bad(f"destination ledger off after import: "
+                   f"{dst.alloc.used_pages} used / "
+                   f"{dst.alloc.free_pages} free (expected 3/3)")
+    live = {p: dst.alloc.refcount(p) for p in dst.alloc.live_pages()}
+    if any(rc != 1 for rc in live.values()):
+        return bad(f"imported pages must arrive exclusive (refcount 1), "
+                   f"got {live}")
+    matched = dst.prefix.match(toks, 2)
+    if len(matched) != 3:
+        return bad(f"imported prefix coverage not re-registered in the "
+                   f"destination trie: match found {len(matched)} of 3 "
+                   f"pages — a same-prefix follow-up cannot dedup")
+    if not dst.mirror_consistent():
+        return bad("destination device-table mirror diverged after "
+                   "import")
+    # second shipment of the same prefix must dedup against the trie
+    src.alloc_slot(0, 6, tokens=toks)
+    src.write_slot(0, entry.cache_zeros(1, 6), 6)
+    src.commit_prefix(0)
+    ship2 = src.export_slot_pages(0, 6, tokens=toks, hops=1)
+    if not dst.import_slot_pages(1, ship2):
+        return bad("second import refused despite shared-prefix headroom")
+    if dst.alloc.shared_pages != 3:
+        return bad(f"same-prefix re-import shares "
+                   f"{dst.alloc.shared_pages} pages, expected all 3 "
+                   f"(trie dedup on import)")
+    live = {p: dst.alloc.refcount(p) for p in dst.alloc.live_pages()}
+    if sum(live.values()) != 6 or len(live) != 3:
+        return bad(f"refcount ledger after dedup import should be 3 "
+                   f"pages x refcount 2, got {live}")
+    if not dst.mirror_consistent():
+        return bad("destination mirror diverged after dedup import")
+    dst.free_slot(0)
+    dst.free_slot(1)
+    if dst.alloc.used_pages != 0 or dst.prefix._by_page:
+        return bad("freeing both imported slots leaked pages or trie "
+                   f"entries: {dst.alloc.used_pages} used, trie "
+                   f"{sorted(dst.prefix._by_page)}")
+    if log is not None:
+        log(f"allocator-model: ship-integrity script in "
+            f"{time.time() - t0:.1f}s")
+    return findings
+
+
 def run(log: Optional[Callable[[str], None]] = None) -> List[Finding]:
     """Both scopes: placed (regions + communal + migration/defrag) and
     the legacy unplaced free-list; plus the scripted device-table-mirror
-    drive over the real ``PagedCache``."""
+    and page-shipment drives over the real ``PagedCache``."""
     findings = explore(ModelConfig(), log=log)
     findings += explore(ModelConfig(num_pages=4, placed=False),
                         log=log)
     findings += check_table_mirror(log=log)
+    findings += check_ship_integrity(log=log)
     return findings

@@ -11,6 +11,8 @@ repro.analysis.checks --fixture <name>` must exit non-zero):
   defrag mapping that moves pages across placement regions
 * ``pr6_metrics_drift`` — a cluster roll-up that drops a per-replica
   co-design metric (PR-6 ad-hoc name-matching drift)
+* ``pr10_ship_trie_drop`` — a shipment import that skips destination
+  trie re-registration (PR-10 silent dedup loss on the decode tier)
 
 Nothing in this package is imported by production code.
 """

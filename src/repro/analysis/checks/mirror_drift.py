@@ -134,6 +134,13 @@ def produced_keys(path: str, cls: Optional[str], func: str,
             arg = node.args[0]
             helper = (arg.func.attr if isinstance(arg, ast.Call)
                       and isinstance(arg.func, ast.Attribute) else None)
+            if helper == "to_dict" and isinstance(arg.func.value,
+                                                  ast.Call) \
+                    and isinstance(arg.func.value.func, ast.Attribute):
+                # typed report at the dict boundary:
+                # rep.update(self.x.helper().to_dict()) — the helper is
+                # one call deeper
+                helper = arg.func.value.func.attr
             if resolve and helper in resolve:
                 out.update(produced_keys(*resolve[helper]))
     return out
@@ -326,10 +333,13 @@ def check_kv_report_reads(sched_path: Optional[str] = None,
     router_path = router_path or module_path("repro.serving.router")
     engine_path = engine_path or module_path("repro.serving.engine")
     cache_path = module_path("repro.serving.paged_cache")
+    api_path = module_path("repro.serving.replica_api")
     resolve = {"sharing_report": (cache_path, "PagedCache",
                                   "sharing_report"),
-               "placement_report": (cache_path, "PagedCache",
-                                    "placement_report")}
+               # placement_report returns a typed PlacementReport; its
+               # to_dict() is the JSON-boundary key producer
+               "placement_report": (api_path, "PlacementReport",
+                                    "to_dict")}
     tree = _tree(engine_path)
     kv_produced: Surface = {}
     for node in tree.body:
@@ -474,6 +484,67 @@ def check_metrics_registered(sched_path: Optional[str] = None,
     return out
 
 
+def check_replica_protocol(impls: Optional[List[Tuple[str, str]]] = None,
+                           api_path: Optional[str] = None
+                           ) -> List[Finding]:
+    """Every declared replica implementation must define the full
+    ``replica_api.Replica`` surface (PR 10), and the typed-report
+    dataclasses must carry exactly the field lists the spec pins — the
+    drift class where the engine grows a replica method (or a report
+    field) the sim mirror and the router test stubs never learn about.
+    """
+    impls = SPEC.REPLICA_IMPLEMENTATIONS if impls is None else impls
+    api_path = api_path or module_path("repro.serving.replica_api")
+    # src/repro/serving/engine.py -> repo root is three levels up
+    root = Path(module_path("repro.serving.engine")).resolve().parents[3]
+    out: List[Finding] = []
+    for rel, cls in impls:
+        path = root / rel
+        if not path.exists():
+            out.append(Finding(PASS, "stale-contract",
+                               f"REPLICA_IMPLEMENTATIONS lists {rel} but "
+                               f"the file does not exist", file=rel))
+            continue
+        try:
+            node = _find_class(_tree(str(path)), cls)
+        except LookupError:
+            out.append(Finding(PASS, "stale-contract",
+                               f"REPLICA_IMPLEMENTATIONS lists class "
+                               f"{cls} but {rel} does not define it",
+                               file=rel))
+            continue
+        methods = {n.name for n in node.body
+                   if isinstance(n, ast.FunctionDef)}
+        for m in SPEC.REPLICA_PROTOCOL_METHODS:
+            if m not in methods:
+                out.append(Finding(
+                    PASS, "replica-protocol",
+                    f"{cls} ({rel}) does not define replica-protocol "
+                    f"method '{m}' — the router drives all replicas "
+                    f"through replica_api.Replica", file=rel,
+                    line=node.lineno))
+    for cls, spec_fields, label in (
+            ("LoadReport", SPEC.LOAD_REPORT_FIELDS,
+             "LOAD_REPORT_FIELDS"),
+            ("PlacementReport", SPEC.PLACEMENT_REPORT_FIELDS,
+             "PLACEMENT_REPORT_FIELDS")):
+        fields = dataclass_fields(api_path, cls)
+        for f in spec_fields:
+            if f not in fields:
+                out.append(Finding(
+                    PASS, "stale-contract",
+                    f"{label} pins '{f}' but {cls} no longer has it",
+                    file=_rel(api_path)))
+        for f, ln in fields.items():
+            if f not in spec_fields:
+                out.append(Finding(
+                    PASS, "replica-protocol",
+                    f"{cls} field '{f}' is not pinned in {label} — "
+                    f"register it in mirror_spec so the JSON boundary "
+                    f"stays audited", file=_rel(api_path), line=ln))
+    return out
+
+
 def run() -> List[Finding]:
     findings: List[Finding] = []
     findings += check_engine_sim_config()
@@ -483,4 +554,5 @@ def run() -> List[Finding]:
     findings += check_kv_report_reads()
     findings += check_fused_emit_guard()
     findings += check_metrics_registered()
+    findings += check_replica_protocol()
     return findings

@@ -155,6 +155,11 @@ CLUSTER_REPORT_PAIRS = [
     ("reconfigurations", "reconfigurations"),
     ("substrate_configs", "substrate_configs"),
     ("array_util_mean", "array_util_mean"),
+    # prefill/decode disaggregation (PR 10)
+    ("tiers", "tiers"),
+    ("shipments", "shipments"),
+    ("shipped_pages", "shipped_pages"),
+    ("ship_cost_s", "ship_cost_s"),
 ]
 
 CLUSTER_REPORT_ONLY = {
@@ -190,3 +195,32 @@ ROUTER_MUST_AGGREGATE = [
 ]
 
 ROUTER_AGGREGATE_DROPS: dict = {}
+
+# --------------------------------------------------------------------------
+# The replica protocol (PR 10): methods every routable replica — live
+# engine, analytic ``serving_sim._Replica``, router test stubs — must
+# define.  The canonical tuple lives next to the Protocol class itself;
+# re-exported so the checker has one spec module to import.  The typed
+# report field lists pin the LoadReport/PlacementReport dataclasses the
+# dict-shaped payloads were replaced with: ``to_dict()`` at the JSON
+# boundary must keep emitting exactly these names.
+# --------------------------------------------------------------------------
+from repro.serving.replica_api import (                       # noqa: F401,E402
+    REPLICA_METHODS as REPLICA_PROTOCOL_METHODS)
+
+LOAD_REPORT_FIELDS = (
+    "active", "prefilling", "queue_depth", "free_slots", "free_pages",
+    "min_region_free", "region_free",
+)
+
+PLACEMENT_REPORT_FIELDS = (
+    "placement_policy", "n_regions", "communal_pages", "region_used",
+    "region_free",
+)
+
+#: implementations the replica-protocol pass checks: (path, class name)
+REPLICA_IMPLEMENTATIONS = [
+    ("src/repro/serving/engine.py", "ServingEngine"),
+    ("src/repro/core/serving_sim.py", "_Replica"),
+    ("tests/test_serving_router.py", "_StubReplica"),
+]

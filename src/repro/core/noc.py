@@ -73,3 +73,30 @@ def page_gather(sys: NMPSystem, local_bytes: float, remote_bytes: float,
          + remote_bytes / sys.noc_link_bw_bytes
          + remote_segments * sys.noc_latency_cycles / sys.freq_hz)
     return CollectiveCost(int(remote_bytes), t)
+
+
+def page_ship(sys: NMPSystem, payload_bytes: float, segments: int,
+              hops: int = 1) -> CollectiveCost:
+    """KV pages shipped between stacks: the cross-stack generalization of
+    :func:`page_gather` that prices prefill->decode tier handoff.
+
+    The source stack gathers the pages exactly as ``page_gather`` would
+    for an all-remote block table (``segments`` distinct page extents
+    funneling through one injection port); the payload then crosses
+    ``hops`` inter-stack links at the device interconnect bandwidth
+    (``xlink_bw_bytes``, one ``xlink_latency_s`` setup per hop) and is
+    scattered into the destination pool at that stack's channel-internal
+    bandwidth.  ``hops=0`` degrades *exactly* to the intra-stack gather —
+    the same primitive prices spilled-page migration and defrag moves
+    inside one pool, so there is a single page-movement cost path.
+    """
+    if hops < 0:
+        raise ValueError("hop count must be non-negative")
+    base = page_gather(sys, 0, payload_bytes, segments)
+    if hops == 0:
+        return base
+    t = (base.time_s
+         + payload_bytes / sys.xlink_bw_bytes
+         + hops * sys.xlink_latency_s
+         + payload_bytes / sys.dram_bw_per_pu)
+    return CollectiveCost(int(payload_bytes), t)

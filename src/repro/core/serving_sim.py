@@ -20,10 +20,12 @@ from repro.core.gpu_model import gpu_decode_step
 from repro.core.hw import H100, GPUConfig, NMPSystem
 from repro.core.operators import ModelSpec
 from repro.core.pipeline import decode_step
+from repro.core.noc import page_ship
 from repro.core.placement import (COMMUNAL, PLACEMENT_POLICIES,
                                   default_system, gather_cost,
                                   kv_bytes_per_token)
 from repro.core.schedule import exec_config, shape_profile
+from repro.serving.replica_api import LoadReport
 
 
 @dataclass
@@ -769,6 +771,23 @@ class ClusterReport:
     reconfigurations: int = 0   # cross-tick shape changes, all replicas
     substrate_configs: int = 0  # distinct per-op configurations seen
     array_util_mean: float = 0.0  # mean per-tick MAC utilization
+    # prefill/decode disaggregation (tiers= callers only)
+    tiers: str = ""             # "P:D"; "" for colocated clusters
+    shipments: int = 0          # prefill->decode KV-page handoffs
+    shipped_pages: int = 0
+    ship_cost_s: float = 0.0    # modeled cross-stack link time, summed
+
+
+@dataclass
+class _SimShipment:
+    """Analytic counterpart of ``serving.paged_cache.PageShipment``: the
+    request plus the priced page movement, no arrays."""
+    req: Request
+    n_pages: int
+    bytes_on_wire: int
+    cost_s: float
+    src: int = -1
+    dst: int = -1
 
 
 def make_cluster_trace(rate_req_s: float, n_requests: int, input_len: int,
@@ -792,11 +811,22 @@ def make_cluster_trace(rate_req_s: float, n_requests: int, input_len: int,
 class _Replica:
     """One decode engine in the analytical cluster: its own clock, xPU
     prefill stream, page pool, and per-group prefix refcounts (the
-    per-replica ``PrefixIndex``, analytically)."""
+    per-replica ``PrefixIndex``, analytically).
+
+    Conforms to ``serving.replica_api.Replica`` (``admit`` / ``tick`` /
+    ``busy`` / ``load_report`` / ``requeue`` / ``export_slot_pages`` /
+    ``import_slot_pages``) so the analytic mirror and the live engine
+    present the same surface; the mirror-drift checker pins this.
+    ``role="prefill"`` replicas run prompts on their serialized xPU
+    stream but never decode — finished prefills wait in ``queue`` until
+    ``export_slot_pages`` ships them to a decode-tier replica.
+    """
 
     def __init__(self, latency: DecodeLatencyModel, spec: ModelSpec,
                  max_batch: int, pages_cap: int, page_size: int,
-                 shared_full: int, tracer=None):
+                 shared_full: int, tracer=None, role: str = "mixed",
+                 ship_sys: Optional[NMPSystem] = None,
+                 page_bytes: int = 0):
         self.latency = latency
         self.spec = spec
         self.max_batch = max_batch
@@ -823,6 +853,61 @@ class _Replica:
             tracer = NULL_TRACER
         self.tracer = tracer
         self._preempted_rids: set = set()
+        # replica_api.Replica surface: role + (always-empty here —
+        # preemptions re-enter this replica's own queue directly)
+        self.role = role
+        self.requeue: List[Request] = []
+        self.ship_sys = ship_sys
+        self.page_bytes = page_bytes
+
+    # -- replica_api.Replica protocol surface --------------------------
+    def admit(self, r: Request) -> bool:
+        """Protocol alias: dispatch-level admission (the queue always
+        accepts; page admission happens at decode entry)."""
+        self.enqueue(r)
+        return True
+
+    def tick(self) -> int:
+        return int(self._step_once())
+
+    def busy(self) -> bool:
+        return bool(self.active or self.queue)
+
+    def load_report(self) -> LoadReport:
+        return LoadReport(
+            active=len(self.active), prefilling=0,
+            queue_depth=len(self.active) + len(self.queue),
+            free_slots=self.max_batch - len(self.active),
+            free_pages=self.free_pages,
+            min_region_free=self.free_pages)
+
+    def export_slot_pages(self, rid: int) -> Optional[_SimShipment]:
+        """Tier handoff, analytically: pull a finished prefill out of the
+        queue and price its page movement with ``noc.page_ship``.
+        ``None`` while the prefill hasn't completed yet (deferral — the
+        mirror of the engine's mid-chunked-prefill refusal)."""
+        r = next((q for q in self.queue if q.rid == rid), None)
+        if r is None:
+            raise KeyError(f"request {rid} is not resident")
+        if r.prefill_done_s > self.clock:
+            return None
+        self.queue.remove(r)
+        n_pages = _pages(r.input_len, self.page_size)
+        cost = page_ship(self.ship_sys or default_system(),
+                         n_pages * self.page_bytes, n_pages, hops=1)
+        return _SimShipment(req=r, n_pages=n_pages,
+                            bytes_on_wire=cost.bytes_on_wire,
+                            cost_s=cost.time_s)
+
+    def import_slot_pages(self, shipment: _SimShipment) -> bool:
+        """Receive a shipped prefill: decode cannot start until the
+        pages land, so the link time extends ``prefill_done_s`` on the
+        modeled clock."""
+        r = shipment.req
+        r.prefill_done_s += shipment.cost_s
+        self.queue.append(r)
+        self.queue.sort(key=lambda q: (q.prefill_done_s, q.rid))
+        return True
 
     # -- load signals read by the dispatch policy ----------------------
     def load(self) -> Tuple[int, int]:
@@ -896,6 +981,9 @@ class _Replica:
     def _step_once(self) -> bool:
         """Admit what's ready, run one decode iteration.  False when
         there is nothing to do at the current clock."""
+        if self.role == "prefill":
+            return False        # prefill tier never decodes; the
+            # cluster harvester ships finished prompts off the queue
         while self.queue and self.queue[0].prefill_done_s <= self.clock \
                 and len(self.active) < self.max_batch \
                 and self._admit(self.queue[0]):
@@ -957,6 +1045,11 @@ class _Replica:
     def advance_to(self, t: float) -> None:
         """Run the replica's loop up to wall-time ``t`` (dispatch-time
         synchronization point: load signals are current as of ``t``)."""
+        if self.role == "prefill":
+            # no decode loop to run; prompts progress on the serialized
+            # xPU stream, which already carries its own timeline
+            self.clock = max(self.clock, t)
+            return
         while self.clock < t:
             if self._step_once():
                 continue
@@ -984,7 +1077,9 @@ def simulate_cluster(latency: DecodeLatencyModel, spec: ModelSpec,
                      shared_prefix_len: int = 0, n_groups: int = 4,
                      skew: float = 1.0,
                      trace: Optional[List[Request]] = None,
-                     tracer=None) -> ClusterReport:
+                     tracer=None,
+                     tiers: Optional[Tuple[int, int]] = None,
+                     sys: Optional[NMPSystem] = None) -> ClusterReport:
     """Analytical mirror of ``serving/router.py``: N independent paged
     decode replicas behind one dispatch policy.
 
@@ -1002,10 +1097,26 @@ def simulate_cluster(latency: DecodeLatencyModel, spec: ModelSpec,
     ``dedup_ratio`` aggregates peak logical pages over peak physical
     pages across replicas; ``per_replica_util`` is busy decode time over
     the cluster makespan.
+
+    ``tiers=(P, D)`` disaggregates the cluster exactly as
+    ``Router(tiers=...)`` does: replicas ``0..P-1`` only prefill (their
+    serialized xPU streams), the rest only decode.  Each finished
+    prefill is shipped to the decode replica already holding its prefix
+    group (ties / no residency: least-loaded), and the
+    ``noc.page_ship`` link time delays decode start on the modeled
+    clock (``ship`` trace events carry it as their duration).
     """
     if policy not in CLUSTER_POLICIES:
         raise ValueError(f"unknown policy {policy!r}; "
                          f"choose from {CLUSTER_POLICIES}")
+    if tiers is not None:
+        p_n, d_n = int(tiers[0]), int(tiers[1])
+        if p_n < 1 or d_n < 1:
+            raise ValueError("tiers needs >=1 prefill and >=1 decode "
+                             f"replica, got {p_n}:{d_n}")
+        if p_n + d_n != n_replicas:
+            raise ValueError(f"tiers {p_n}:{d_n} must sum to the "
+                             f"{n_replicas} replicas")
     if trace is None:
         trace = make_cluster_trace(rate_req_s, n_requests, input_len,
                                    output_len, n_groups=n_groups,
@@ -1026,10 +1137,19 @@ def simulate_cluster(latency: DecodeLatencyModel, spec: ModelSpec,
     # a shorter explicit prompt would drive page accounting negative
     if shared_prefix_len > min(r.input_len for r in trace):
         raise ValueError("shared_prefix_len exceeds a trace prompt")
+    ship_sys = sys if sys is not None else default_system()
+    page_bytes = kv_bytes_per_token(spec) * page_size
+    prefill_idx: Tuple[int, ...] = ()
+    decode_idx: Tuple[int, ...] = tuple(range(n_replicas))
+    if tiers is not None:
+        prefill_idx = tuple(range(tiers[0]))
+        decode_idx = tuple(range(tiers[0], n_replicas))
     reps = [_Replica(latency, spec, max_batch, pages_cap, page_size,
                      shared_full,
                      tracer=(tracer.for_replica(i) if tracer is not None
-                             else None))
+                             else None),
+                     role=("prefill" if i in prefill_idx else "mixed"),
+                     ship_sys=ship_sys, page_bytes=page_bytes)
             for i in range(n_replicas)]
     reconfigs0 = getattr(latency, "reconfigurations", 0)
 
@@ -1043,6 +1163,10 @@ def simulate_cluster(latency: DecodeLatencyModel, spec: ModelSpec,
 
     def select(r: Request) -> int:
         nonlocal rr
+        if tiers is not None:
+            # disaggregated: arrivals land on the prefill tier; decode
+            # placement happens at the ship point below
+            return least_loaded(prefill_idx)
         if policy == "round_robin":
             i = rr % n_replicas
             rr += 1
@@ -1071,6 +1195,38 @@ def simulate_cluster(latency: DecodeLatencyModel, spec: ModelSpec,
             tracer.emit("dispatch", replica=i, rid=req.rid,
                         ts=req.arrival_s, policy=policy)
         reps[i].enqueue(req)
+
+    shipments = shipped_pages = 0
+    ship_cost = 0.0
+    if tiers is not None:
+        # tier handoff: ship each finished prefill, in completion order,
+        # to the decode replica holding its prefix group (mirror of
+        # Router._ship_ready's residency-then-pressure choice), advancing
+        # the decode tier to the ship instant so load signals are read
+        # exactly when the real harvester would read them
+        ready = sorted(((r, i) for i in prefill_idx
+                        for r in reps[i].queue),
+                       key=lambda pair: (pair[0].prefill_done_s,
+                                         pair[0].rid))
+        for r, i in ready:
+            t_ready = r.prefill_done_s
+            reps[i].advance_to(t_ready)
+            for j in decode_idx:
+                reps[j].advance_to(t_ready)
+            holders = [j for j in decode_idx
+                       if reps[j].holds_group(r.group)]
+            j = (holders[0] if len(holders) == 1
+                 else least_loaded(holders if holders else decode_idx))
+            ship = reps[i].export_slot_pages(r.rid)
+            assert ship is not None and reps[j].import_slot_pages(ship)
+            shipments += 1
+            shipped_pages += ship.n_pages
+            ship_cost += ship.cost_s
+            if tracer is not None and tracer.enabled:
+                tracer.emit("ship", replica=i, rid=r.rid, ts=t_ready,
+                            dur=ship.cost_s, pages=ship.n_pages,
+                            bytes=ship.bytes_on_wire,
+                            cost_s=ship.cost_s, src=i, dst=j)
     for rep in reps:
         rep.run_to_completion()
 
@@ -1100,4 +1256,7 @@ def simulate_cluster(latency: DecodeLatencyModel, spec: ModelSpec,
         substrate_configs=len(getattr(latency, "configs_seen", ())),
         array_util_mean=(sum(rep.tick_util_sum for rep in reps)
                          / max(1, sum(rep.tick_iters for rep in reps))
-                         if any(rep.tick_iters for rep in reps) else 0.0))
+                         if any(rep.tick_iters for rep in reps) else 0.0),
+        tiers=(f"{tiers[0]}:{tiers[1]}" if tiers is not None else ""),
+        shipments=shipments, shipped_pages=shipped_pages,
+        ship_cost_s=ship_cost)

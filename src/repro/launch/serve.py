@@ -36,6 +36,12 @@ pages).  ``--groups G`` drives a skewed multi-tenant trace (G distinct
 system prompts, Zipf popularity).  ``--eos-rate`` samples per-request
 early-stop decode lengths; ``--trace-file`` replays a recorded JSON
 trace instead of synthesizing one.
+
+Disaggregated serving (PR 10): ``--tiers P:D`` (with ``--paged`` and
+``--replicas P+D``) splits the cluster into a prefill tier and a decode
+tier; finished prefills are shipped — KV pages, block-table row, prefix
+coverage — over the priced inter-stack link, and ``ship`` events land
+in the ``--trace-out`` timeline.
 """
 from __future__ import annotations
 
@@ -115,6 +121,12 @@ def main():
                     help="engine replicas behind the front-end router")
     ap.add_argument("--router-policy", choices=POLICIES,
                     default="round_robin")
+    ap.add_argument("--tiers", type=str, default=None, metavar="P:D",
+                    help="disaggregate the cluster into P prefill and D "
+                         "decode replicas (P+D must equal --replicas; "
+                         "requires --paged): prefills are harvested at "
+                         "completion and their KV pages shipped over the "
+                         "priced inter-stack link to the decode tier")
     ap.add_argument("--groups", type=int, default=1,
                     help="distinct system-prompt groups (with "
                          "--shared-prefix): the prefix-affinity workload")
@@ -170,6 +182,21 @@ def main():
                  "modeled clock to charge otherwise)")
     if args.reconfig_cost is not None and args.reconfig_cost < 0:
         ap.error("--reconfig-cost must be >= 0")
+    tiers = None
+    if args.tiers is not None:
+        try:
+            p_n, d_n = (int(v) for v in args.tiers.split(":"))
+        except ValueError:
+            ap.error("--tiers must look like P:D, e.g. 1:3")
+        if not args.paged:
+            ap.error("--tiers requires --paged (page shipping moves "
+                     "block-table pages)")
+        if p_n < 1 or d_n < 1:
+            ap.error("--tiers needs at least one replica per tier")
+        if p_n + d_n != args.replicas:
+            ap.error(f"--tiers {p_n}:{d_n} must sum to --replicas "
+                     f"({args.replicas})")
+        tiers = (p_n, d_n)
 
     entry = registry.get(args.arch, reduced=not args.full)
     ecfg = EngineConfig(max_batch=args.max_batch,
@@ -196,7 +223,7 @@ def main():
         tracer = Tracer()
     if args.replicas > 1:
         router = make_cluster(entry, ecfg, args.replicas,
-                              policy=args.router_policy)
+                              policy=args.router_policy, tiers=tiers)
         if tracer is not None:
             router.set_tracer(tracer)
         metrics = router.run_trace(reqs)

@@ -9,9 +9,10 @@
   JSON object per line.  ``json`` round-trips Python floats exactly, so
   a replayed log reproduces :func:`trace_report` bit-for-bit.
 * :func:`trace_report` — phase attribution: prefill vs decode vs
-  reconfig vs stall.  Span events are disjoint host (or modeled-clock)
-  intervals, so the four phases sum to the makespan by construction —
-  ``stall_s`` is the residual the engine spent idle or in bookkeeping.
+  ship vs reconfig vs stall.  Span events are disjoint host (or
+  modeled-clock) intervals, so the phases sum to the makespan by
+  construction — ``stall_s`` is the residual the engine spent idle or
+  in bookkeeping.
 """
 from __future__ import annotations
 
@@ -87,14 +88,15 @@ def trace_report(events: Sequence[TraceEvent]) -> dict:
     """Phase-attribution summary over one event stream.
 
     ``phases`` partitions the makespan: prefill-chunk spans, decode
-    spans (per-tick + fused), reconfiguration charge (sims charge it on
-    their clock; the engine's wall reconfigure events are instantaneous
-    and carry the modeled cost in ``args``), and ``stall_s`` — the
-    residual (idle waits, admission, host bookkeeping).  Because span
-    events never overlap, ``sum(phases) == makespan_s`` exactly.
+    spans (per-tick + fused), tier-handoff page shipments (sims charge
+    the modeled link time as the span duration; the engine's wall ship
+    events are instantaneous and carry the modeled cost in ``args``),
+    reconfiguration charge (likewise), and ``stall_s`` — the residual
+    (idle waits, admission, host bookkeeping).  Because span events
+    never overlap, ``sum(phases) == makespan_s`` exactly.
     """
     counts: Dict[str, int] = {}
-    prefill_s = decode_s = reconfig_s = 0.0
+    prefill_s = decode_s = ship_s = reconfig_s = 0.0
     t_lo, t_hi = float("inf"), float("-inf")
     finished = 0
     for ev in events:
@@ -103,6 +105,8 @@ def trace_report(events: Sequence[TraceEvent]) -> dict:
             prefill_s += ev.dur
         elif ev.kind in _DECODE_KINDS:
             decode_s += ev.dur
+        elif ev.kind == "ship":
+            ship_s += ev.dur
         elif ev.kind == "reconfigure":
             reconfig_s += ev.dur
         elif ev.kind == "finish":
@@ -110,9 +114,11 @@ def trace_report(events: Sequence[TraceEvent]) -> dict:
         t_lo = min(t_lo, ev.ts)
         t_hi = max(t_hi, ev.ts + ev.dur)
     makespan = (t_hi - t_lo) if counts else 0.0
-    stall = max(0.0, makespan - prefill_s - decode_s - reconfig_s)
+    stall = max(0.0, makespan - prefill_s - decode_s - ship_s
+                - reconfig_s)
     return {"makespan_s": makespan,
             "finished": finished,
             "events": dict(sorted(counts.items())),
             "phases": {"prefill_s": prefill_s, "decode_s": decode_s,
-                       "reconfig_s": reconfig_s, "stall_s": stall}}
+                       "ship_s": ship_s, "reconfig_s": reconfig_s,
+                       "stall_s": stall}}

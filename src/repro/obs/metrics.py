@@ -199,5 +199,6 @@ ROUTER_METRIC_CONTRACT: Tuple[str, ...] = (
     "tokens_per_s", "e2e_p50_s", "e2e_p99_s", "tbt_mean_s", "tbt_p99_s",
     "preemptions", "finish_eos", "finish_budget", "dedup_ratio_agg",
     "reconfigurations", "substrate_configs", "modeled_tokens_per_s",
-    "array_util_mean", "per_replica", "hists",
+    "array_util_mean", "tiers", "shipments", "shipped_pages",
+    "ship_cost_s", "per_replica", "hists",
 )

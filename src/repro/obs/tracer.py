@@ -43,6 +43,9 @@ from typing import Any, Dict, List, Optional
 #: cow_fork       copy-on-write fork of a shared page (args: block, page)
 #: defrag         page-pool compaction ran (args: moved, cost_s)
 #: migrate        spilled pages re-homed (args: pages, cost_s)
+#: ship           KV pages shipped between tiers at prefill handoff
+#:                (args: pages, bytes, cost_s, src, dst); sims charge
+#:                dur on the modeled clock
 #: reconfigure    substrate shape-profile change (args: old, new,
 #:                modeled_reconfig_s); sims charge dur on their clock
 #: finish         request retired (args: reason, tokens)
@@ -52,7 +55,7 @@ from typing import Any, Dict, List, Optional
 EVENT_KINDS = (
     "arrival", "dispatch", "admit", "prefill_chunk", "decode_step",
     "fused_tick", "grow", "preempt", "cow_fork", "defrag", "migrate",
-    "reconfigure", "finish", "gauge",
+    "ship", "reconfigure", "finish", "gauge",
 )
 
 

@@ -56,7 +56,8 @@ import numpy as np
 
 from repro.models import registry
 from repro.obs.tracer import NULL_TRACER
-from repro.serving.paged_cache import PagedCache, num_blocks
+from repro.serving.paged_cache import PagedCache, PageShipment, num_blocks
+from repro.serving.replica_api import LoadReport
 # re-exported for back-compat: these lived here before the scheduling
 # loop was extracted into serving/scheduler.py
 from repro.serving.scheduler import (RequestState, Scheduler, load_trace,
@@ -155,6 +156,11 @@ class ServingEngine:
         self.preemption_count = 0
         self.requeue: List[RequestState] = []   # preempted, awaiting re-admit
         self._prefilling: Optional[dict] = None   # chunk-scheduler state
+        # disaggregation tier (PR 10): "mixed" engines prefill AND decode
+        # (the colocated default); a "prefill"-tier engine runs prompts
+        # but never decodes — its finished slots are harvested by the
+        # router and shipped to a "decode"-tier replica's page pool
+        self.role = "mixed"
         # lifecycle tracing (repro.obs): NULL_TRACER keeps the hot path
         # branch-cheap; set_tracer swaps in a recording tracer.  Tracing
         # only reads state, so tokens are bit-identical either way.
@@ -297,7 +303,9 @@ class ServingEngine:
 
     def step(self) -> int:
         """One decode iteration for all active slots; returns #finished."""
-        if not self.active:
+        if not self.active or self.role == "prefill":
+            # prefill-tier engines hold finished prompts for harvest
+            # (export_slot_pages) instead of decoding them
             return 0
         t_step0 = time.perf_counter() if self.tracer.enabled else 0.0
         batch0 = len(self.active)
@@ -473,9 +481,11 @@ class ServingEngine:
             self._prefill_chunk_tick()
         if self._tick_model is not None:
             # composition of the decode step about to run (the chunk just
-            # ticked may have activated its request into this batch)
-            ctxs = [len(r.prompt) + len(r.tokens_out)
-                    for r in self.active.values()]
+            # ticked may have activated its request into this batch; a
+            # prefill-tier engine never decodes, so its batch is empty)
+            ctxs = ([len(r.prompt) + len(r.tokens_out)
+                     for r in self.active.values()]
+                    if self.role != "prefill" else [])
             self._note_tick(len(ctxs), ctxs, pf_tokens, pf_ctx)
         n_fin = self.step()
         if self.tracer.enabled:
@@ -496,22 +506,32 @@ class ServingEngine:
     def busy(self) -> bool:
         return bool(self.active) or self._prefilling is not None
 
-    def load_report(self) -> dict:
+    def load_report(self) -> LoadReport:
         """Load snapshot for front-end routing decisions: resident work
-        (``queue_depth``) and headroom (``free_slots`` / ``free_pages``)."""
+        (``queue_depth``) and headroom (``free_slots`` / ``free_pages``),
+        typed per the :mod:`~repro.serving.replica_api` contract."""
         prefilling = int(self._prefilling is not None)
-        return {"active": len(self.active),
-                "prefilling": prefilling,
-                "queue_depth": (len(self.active) + prefilling
-                                + len(self.requeue)),
-                "free_slots": len(self.free_slots),
-                # dense engines have no page pool; slots are the capacity
-                "free_pages": len(self.free_slots)}
+        free = len(self.free_slots)
+        # dense engines have no page pool; slots are the capacity
+        return LoadReport(
+            active=len(self.active), prefilling=prefilling,
+            queue_depth=(len(self.active) + prefilling
+                         + len(self.requeue)),
+            free_slots=free, free_pages=free, min_region_free=free)
 
     def prefix_residency(self, prompt: np.ndarray) -> int:
         """Prompt pages already resident on this replica (0: none — the
         dense engine shares nothing)."""
         return 0
+
+    # -- disaggregation hooks (PR 10; paged engine overrides) ----------
+    def export_slot_pages(self, rid: int) -> Optional[PageShipment]:
+        raise RuntimeError("page shipping requires the paged engine "
+                           "(EngineConfig.paged)")
+
+    def import_slot_pages(self, shipment: PageShipment) -> bool:
+        raise RuntimeError("page shipping requires the paged engine "
+                           "(EngineConfig.paged)")
 
     # -- single-replica driver wrappers --------------------------------
     def run_trace(self, reqs: List[RequestState]) -> dict:
@@ -669,22 +689,77 @@ class PagedServingEngine(ServingEngine):
         self._gather_cost_steps += 1
         self.gather_cost_samples.append(cost)
 
-    def load_report(self) -> dict:
-        rep = super().load_report()
-        if self.paged.has_seq:
-            rep["free_pages"] = self.paged.alloc.free_pages
-            if self.paged.placement is not None:
-                # per-region pressure: the scarcest slot region is what
-                # gates an affinity admission staying fully co-located
-                free = self.paged.alloc.region_free()
-                slot_free = [free[r] for r in free if r >= 0]
-                rep["region_free"] = slot_free
-                rep["min_region_free"] = min(slot_free)
-        rep.setdefault("min_region_free", rep["free_pages"])
-        return rep
+    def load_report(self) -> LoadReport:
+        base = super().load_report()
+        if not self.paged.has_seq:
+            return base
+        free_pages = self.paged.alloc.free_pages
+        region_free: tuple = ()
+        min_region_free = free_pages
+        if self.paged.placement is not None:
+            # per-region pressure: the scarcest slot region is what
+            # gates an affinity admission staying fully co-located
+            free = self.paged.alloc.region_free()
+            slot_free = tuple(free[r] for r in free if r >= 0)
+            region_free = slot_free
+            min_region_free = min(slot_free)
+        return LoadReport(
+            active=base.active, prefilling=base.prefilling,
+            queue_depth=base.queue_depth, free_slots=base.free_slots,
+            free_pages=free_pages, min_region_free=min_region_free,
+            region_free=region_free)
 
     def prefix_residency(self, prompt: np.ndarray) -> int:
         return self.paged.prefix_residency(prompt)
+
+    # -- prefill/decode disaggregation (PR 10) -------------------------
+    def export_slot_pages(self, rid: int) -> Optional[PageShipment]:
+        """Package request ``rid``'s finished-prefill slot for shipment
+        to a decode-tier replica, and release the slot here.
+
+        Returns ``None`` while the request is still mid chunked-prefill
+        (handoff is deferred — the harvester retries next tick).  The
+        shipment carries the request object, its first decoded token
+        (produced at the prefill boundary on THIS replica, so the
+        decode tier continues the exact greedy stream), and the priced
+        cross-stack movement cost.
+        """
+        st = self._prefilling
+        if st is not None and st["req"].rid == rid:
+            return None                 # mid-prefill: defer the handoff
+        slot = next((s for s, r in self.active.items() if r.rid == rid),
+                    None)
+        if slot is None:
+            raise KeyError(f"request {rid} is not resident")
+        req = self.active.pop(slot)
+        shipment = self.paged.export_slot_pages(
+            slot, int(self._lengths_host[slot]), tokens=req.prompt,
+            sys=self._hw, hops=1)
+        shipment.req = req
+        shipment.next_tok = int(self._next_tok[slot])
+        self._lengths_host[slot] = 0
+        self._maybe_defrag()
+        self.free_slots.append(slot)
+        return shipment
+
+    def import_slot_pages(self, shipment: PageShipment) -> bool:
+        """Splice a prefill-tier shipment into a free slot and join the
+        request to this replica's decode batch.  ``False`` when no slot
+        or insufficient pages are available (caller re-targets/retries);
+        atomic either way."""
+        if not self.free_slots:
+            return False
+        slot = self.free_slots.pop()
+        if not self.paged.import_slot_pages(slot, shipment):
+            self.free_slots.append(slot)
+            return False
+        req = shipment.req
+        self._lengths_host[slot] = shipment.n_tokens
+        self._next_tok[slot] = shipment.next_tok
+        req.slot = slot
+        self.active[slot] = req
+        self._note_pages()
+        return True
 
     # -- chunked prefill straight into block-table pages ---------------
     def _start_chunked(self, req: RequestState) -> bool:
@@ -777,11 +852,13 @@ class PagedServingEngine(ServingEngine):
                "defrag_runs": self.defrag_runs,
                "prefill_skipped_tokens": self.prefill_tokens_skipped,
                "migrated_pages": self.paged.migrated_pages,
-               "migration_cost_s": self.paged.migration_cost_s}
+               "migration_cost_s": self.paged.migration_cost_s,
+               "shipped_pages": self.paged.shipped_pages,
+               "ship_cost_s": self.paged.ship_cost_s}
         rep.update(self.paged.sharing_report())
         if self.paged.placement is not None:
             steps = max(1, self._gather_cost_steps)
-            rep.update(self.paged.placement_report())
+            rep.update(self.paged.placement_report().to_dict())
             rep["region_peak"] = {str(r): u
                                   for r, u in self._region_peak.items()}
             rep["gather_cost_mean_s"] = self._gather_cost_sum / steps
@@ -914,6 +991,7 @@ class PagedServingEngine(ServingEngine):
     def tick(self) -> int:
         if (self.ecfg.fuse_steps <= 1 or not self.paged.has_seq
                 or self.cfg.family not in _ATTN_FAMILIES
+                or self.role == "prefill"
                 or not hasattr(self.entry.module, "decode_fused_paged")):
             return super().tick()
         return self._fused_tick()

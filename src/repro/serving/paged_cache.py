@@ -47,10 +47,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.gemm import ceil_div
-from repro.core.noc import page_gather
+from repro.core.noc import CollectiveCost, page_ship
 from repro.core.placement import (COMMUNAL, PLACEMENT_POLICIES, GatherCost,
                                   PlacementMap, default_system, gather_cost)
 from repro.obs.tracer import NULL_TRACER
+from repro.serving.replica_api import PlacementReport
 
 
 # ---------------------------------------------------------------------------
@@ -449,6 +450,54 @@ def num_blocks(n_tokens: int, page_size: int) -> int:
 
 
 # ---------------------------------------------------------------------------
+# Cross-pool page shipment (prefill -> decode tier handoff, PR 10)
+# ---------------------------------------------------------------------------
+@dataclass
+class PageShipment:
+    """A slot's KV pages packaged for transfer between two pools.
+
+    Built by :meth:`PagedCache.export_slot_pages` (which also releases
+    the slot at the source) and consumed by
+    :meth:`PagedCache.import_slot_pages`.  Carries everything the
+    destination needs to reconstruct the slot bit-identically:
+
+    * ``seq_payload`` — per cache leaf, the gathered page block
+      ``(L, n_pages, page, ...)`` for sequence leaves (``None`` for
+      dense leaves);
+    * ``slot_payload`` — per cache leaf, the slot column for dense
+      leaves (recurrent state, lengths; ``None`` for sequence leaves);
+    * ``tokens`` — the prompt, so the destination can consult *its own*
+      prefix trie (mapping already-resident pages instead of writing
+      duplicates) and re-register the coverage after import;
+    * ``cost_s`` / ``bytes_on_wire`` — the priced cross-stack movement
+      (:func:`~repro.core.noc.page_ship`), charged once at export.
+
+    The engine layer annotates ``req`` (the live request object),
+    ``next_tok`` (the first decoded token, produced on the prefill
+    tier) and ``src``/``dst`` replica ids for the ``ship`` trace event.
+    """
+
+    n_tokens: int
+    page_size: int
+    n_pages: int
+    tokens: Optional[np.ndarray]
+    seq_payload: List[Optional[jax.Array]]
+    slot_payload: List[Optional[jax.Array]]
+    bytes_on_wire: int = 0
+    cost_s: float = 0.0
+    # engine-layer annotations (router handoff)
+    req: Any = None
+    next_tok: int = -1
+    src: int = -1
+    dst: int = -1
+
+
+#: legal ``kind`` values for :meth:`PagedCache.transfer_pages` — every
+#: priced page movement in the repo is one of these.
+TRANSFER_KINDS = ("migrate", "defrag", "ship")
+
+
+# ---------------------------------------------------------------------------
 # Device-side paged cache
 # ---------------------------------------------------------------------------
 @dataclass
@@ -522,6 +571,11 @@ class PagedCache:
         # cross-region home migration (defrag's spilled-page repair pass)
         self.migrated_pages = 0
         self.migration_cost_s = 0.0
+        # in-pool compaction moves (defrag) and cross-pool shipments
+        # (tier handoff), both priced through transfer_pages
+        self.defrag_move_cost_s = 0.0
+        self.shipped_pages = 0
+        self.ship_cost_s = 0.0
         self._bytes_per_page: Optional[int] = None
         # lifecycle-event sink; the engine rebinds this to its own
         # (replica-bound) tracer when one is attached
@@ -716,6 +770,9 @@ class PagedCache:
         self.cow_forks = 0
         self.migrated_pages = 0
         self.migration_cost_s = 0.0
+        self.defrag_move_cost_s = 0.0
+        self.shipped_pages = 0
+        self.ship_cost_s = 0.0
         self._invalidate()
 
     # -- copy-on-write -----------------------------------------------------
@@ -914,6 +971,44 @@ class PagedCache:
         self.prefix.register(tokens, self.blocks_of(slot)[:covered],
                              self.page_size)
 
+    # -- priced page movement (the one code path) --------------------------
+    def transfer_pages(self, n_pages: int, *, sys=None, hops: int = 0,
+                       kind: str = "migrate") -> CollectiveCost:
+        """Price (and account) the movement of ``n_pages`` physical pages.
+
+        Every page movement in the cache goes through here, costed by
+        :func:`~repro.core.noc.page_ship`: spilled-page re-homing
+        (``kind="migrate"``, ``hops=0`` — intra-stack, exactly the
+        legacy ``page_gather`` number), defrag compaction moves
+        (``kind="defrag"``, ``hops=0``), and cross-stack tier shipments
+        (``kind="ship"``, ``hops>=1`` — adds the inter-stack link and
+        destination-scatter terms).  Accumulates the matching counters
+        (``migrated_pages``/``migration_cost_s``,
+        ``defrag_move_cost_s``, ``shipped_pages``/``ship_cost_s``) and
+        emits the ``migrate`` lifecycle event; ``defrag``/``ship``
+        events are emitted by their callers, which own the span
+        context (moved counts, src/dst replicas)."""
+        if kind not in TRANSFER_KINDS:
+            raise ValueError(f"unknown transfer kind {kind!r}; "
+                             f"choose from {TRANSFER_KINDS}")
+        if n_pages <= 0:
+            return CollectiveCost(0, 0.0)
+        cost = page_ship(sys if sys is not None else default_system(),
+                         n_pages * self.bytes_per_page(), n_pages,
+                         hops=hops)
+        if kind == "migrate":
+            self.migrated_pages += n_pages
+            self.migration_cost_s += cost.time_s
+            if self.tracer.enabled:
+                self.tracer.emit("migrate", pages=n_pages,
+                                 cost_s=cost.time_s)
+        elif kind == "defrag":
+            self.defrag_move_cost_s += cost.time_s
+        else:
+            self.shipped_pages += n_pages
+            self.ship_cost_s += cost.time_s
+        return cost
+
     def migrate_spilled(self, sys=None) -> int:
         """Move exclusively-owned pages that spilled out of their slot's
         home region back home (placed mode only).
@@ -923,8 +1018,9 @@ class PagedCache:
         keeps paying the cross-region gather tax on every decode step,
         forever.  This pass repairs that: each spilled page whose home
         region has free capacity again is physically copied home through
-        the NoC, priced with :func:`~repro.core.noc.page_gather` and
-        accumulated into ``migrated_pages`` / ``migration_cost_s``.
+        the NoC, priced through :meth:`transfer_pages` (``hops=0`` —
+        the intra-stack :func:`~repro.core.noc.page_ship` degradation)
+        and accumulated into ``migrated_pages`` / ``migration_cost_s``.
 
         Shared pages stay put — refcount > 1 means holders with
         different homes read them — and trie-registered pages are
@@ -953,14 +1049,7 @@ class PagedCache:
                 self.alloc.decref(page)
                 moved += 1
         if moved:
-            cost = page_gather(
-                sys if sys is not None else default_system(),
-                0, moved * self.bytes_per_page(), moved)
-            self.migrated_pages += moved
-            self.migration_cost_s += cost.time_s
-            if self.tracer.enabled:
-                self.tracer.emit("migrate", pages=moved,
-                                 cost_s=cost.time_s)
+            self.transfer_pages(moved, sys=sys, hops=0, kind="migrate")
             self._invalidate()
         return moved
 
@@ -1019,10 +1108,12 @@ class PagedCache:
                                ).astype(np.int32)
         self.alloc.rebuild({mapping[p]: self.alloc.refcount(p)
                             for p in live})
+        moved_n = sum(1 for o, n in mapping.items() if o != n)
+        cost = self.transfer_pages(moved_n, sys=sys, hops=0,
+                                   kind="defrag")
         if self.tracer.enabled:
-            self.tracer.emit(
-                "defrag", live_pages=len(live),
-                moved=sum(1 for o, n in mapping.items() if o != n))
+            self.tracer.emit("defrag", live_pages=len(live),
+                             moved=moved_n, cost_s=cost.time_s)
         if self.prefix is not None:
             self.prefix.remap(mapping)
             # region-constrained targets must keep the trie consistent:
@@ -1032,6 +1123,128 @@ class PagedCache:
                 "defrag left the prefix trie pointing at a dead page"
         self._invalidate()
         return mapping
+
+    # -- cross-pool shipment (prefill -> decode tier, PR 10) ---------------
+    def export_slot_pages(self, slot: int, n_tokens: int,
+                          tokens: Optional[np.ndarray] = None, *,
+                          sys=None, hops: int = 1) -> PageShipment:
+        """Package ``slot``'s resident state for another pool and
+        release the slot here.
+
+        Sequence leaves gather the slot's first ``ceil(n_tokens /
+        page)`` pages into a contiguous ``(L, n, page, ...)`` block
+        (shared-prefix pages included — the destination decides what it
+        can dedup against its own trie); dense leaves copy the slot
+        column.  The movement is priced once, here, through
+        :meth:`transfer_pages` (``kind="ship"``): the source pays the
+        gather + ``hops`` inter-stack link crossings + the destination
+        scatter.  The slot is then freed exactly as a finished request
+        would be — shared pages survive under their remaining holders'
+        references, and trie entries drop only with their last holder.
+        """
+        pages = self.blocks_of(slot)
+        if self.has_seq:
+            need = num_blocks(n_tokens, self.page_size)
+            assert len(pages) >= need, \
+                "export_slot_pages of an under-mapped slot"
+            pages = pages[:need]
+        seq_payload: List[Optional[jax.Array]] = []
+        slot_payload: List[Optional[jax.Array]] = []
+        idx = jnp.asarray(pages, jnp.int32)
+        for pool, seq in zip(self.store, self.is_seq):
+            if seq:
+                seq_payload.append(pool[:, idx] if pages else None)
+                slot_payload.append(None)
+            else:
+                seq_payload.append(None)
+                slot_payload.append(pool[slot] if pool.ndim == 1
+                                    else pool[:, slot])
+        cost = self.transfer_pages(len(pages), sys=sys, hops=hops,
+                                   kind="ship")
+        shipment = PageShipment(
+            n_tokens=n_tokens, page_size=self.page_size,
+            n_pages=len(pages),
+            tokens=(np.asarray(tokens).copy()
+                    if tokens is not None else None),
+            seq_payload=seq_payload, slot_payload=slot_payload,
+            bytes_on_wire=cost.bytes_on_wire, cost_s=cost.time_s)
+        self.free_slot(slot)
+        return shipment
+
+    def import_slot_pages(self, slot: int,
+                          shipment: PageShipment) -> bool:
+        """Splice a :class:`PageShipment` into an empty ``slot`` here.
+
+        Refcount/region reconciliation: the destination's *own* prefix
+        trie is consulted first — leading prompt pages already resident
+        are mapped (incref) instead of re-written, exactly as a local
+        admission would dedup; only the unshared tail pages allocate
+        (home-region assignment + communal steering for publishable
+        full prompt pages) and receive the shipped payload.  The
+        imported coverage is then registered in the destination trie so
+        later arrivals dedup against it.  Atomic: returns ``False``
+        with nothing mapped, incref'd, or written when the pool cannot
+        hold the unshared pages — the caller retries or re-targets.
+        """
+        if shipment.page_size != self.page_size:
+            raise ValueError(
+                f"shipment page_size {shipment.page_size} != pool "
+                f"page_size {self.page_size} (tiers must agree)")
+        if not self.has_seq:
+            self._import_dense(slot, shipment)
+            return True
+        assert not self.blocks_of(slot), "import into a mapped slot"
+        need = shipment.n_pages
+        tokens = shipment.tokens
+        shared: List[int] = []
+        if self.share and tokens is not None and len(tokens):
+            shared = self.prefix.match(np.asarray(tokens),
+                                       self.page_size)[:need]
+        home = self._assign_home(slot)
+        n_communal = 0
+        if self.share and tokens is not None:
+            n_communal = max(0, len(tokens) // self.page_size
+                             - len(shared))
+        fresh = self.alloc.alloc(need - len(shared), home=home,
+                                 communal=n_communal)
+        if fresh is None:
+            self.home_region.pop(slot, None)
+            return False
+        for p in shared:
+            self.alloc.incref(p)
+        pages = shared + fresh
+        self.tables[slot, :need] = pages
+        self.shared_count[slot] = len(shared)
+        dst_idx = jnp.asarray(fresh, jnp.int32)
+        src_idx = jnp.asarray(np.arange(len(shared), need), jnp.int32)
+        new_store = []
+        for pool, seq, payload, col in zip(self.store, self.is_seq,
+                                           shipment.seq_payload,
+                                           shipment.slot_payload):
+            if seq:
+                if fresh:
+                    pool = pool.at[:, dst_idx].set(payload[:, src_idx])
+                new_store.append(pool)
+            elif pool.ndim == 1:
+                new_store.append(pool.at[slot].set(col))
+            else:
+                new_store.append(pool.at[:, slot].set(col))
+        self.store = new_store
+        if self.share and tokens is not None:
+            self._pending_prompt[slot] = np.asarray(tokens).copy()
+            self.commit_prefix(slot)
+        self._mirror_row(slot)
+        return True
+
+    def _import_dense(self, slot: int, shipment: PageShipment) -> None:
+        """Recurrent families: no pages — just restore the slot column."""
+        new_store = []
+        for pool, col in zip(self.store, shipment.slot_payload):
+            if pool.ndim == 1:
+                new_store.append(pool.at[slot].set(col))
+            else:
+                new_store.append(pool.at[:, slot].set(col))
+        self.store = new_store
 
     # -- placement scoring -------------------------------------------------
     def bytes_per_page(self) -> int:
@@ -1079,17 +1292,23 @@ class PagedCache:
         return (float(np.mean([c.time_s for c in costs])),
                 float(np.mean([c.concentration for c in costs])))
 
-    def placement_report(self) -> Dict[str, Any]:
-        """Per-region pressure snapshot (empty without a placement map)."""
+    def placement_report(self) -> PlacementReport:
+        """Per-region pressure snapshot, typed (PR 10).
+
+        Returns an *empty* :class:`~repro.serving.replica_api.
+        PlacementReport` without a placement map; ``to_dict()`` at the
+        JSON/metrics boundary reproduces the legacy dict (``{}`` when
+        empty) key-for-key."""
         if self.placement is None:
-            return {}
+            return PlacementReport()
         used = self.alloc.region_used()
         free = self.alloc.region_free()
-        return {"placement_policy": self.placement_policy,
-                "n_regions": self.placement.n_regions,
-                "communal_pages": self.placement.communal_pages,
-                "region_used": {str(r): used[r] for r in used},
-                "region_free": {str(r): free[r] for r in free}}
+        return PlacementReport(
+            placement_policy=self.placement_policy,
+            n_regions=self.placement.n_regions,
+            communal_pages=self.placement.communal_pages,
+            region_used={str(r): used[r] for r in used},
+            region_free={str(r): free[r] for r in free})
 
 
 # ---------------------------------------------------------------------------

@@ -25,6 +25,22 @@ Dispatch is a pure host-side decision; replicas then run their own
 continuous-batching loops, so a preempted request always re-enters the
 replica that holds its history.  The same policies are mirrored
 analytically in ``core/serving_sim.py::simulate_cluster``.
+
+Prefill/decode disaggregation (PR 10)
+-------------------------------------
+``tiers=(P, D)`` splits the cluster: replicas ``0..P-1`` are the
+prefill tier (their engines take ``role="prefill"`` — they run prompt
+chunks but never decode), ``P..P+D-1`` the decode tier.  Arrivals go to
+the least-loaded prefill replica; when a request's prefill completes
+the router harvests it — ``export_slot_pages`` on the source packages
+the KV pages + block-table row + prefix-trie coverage as a
+:class:`~repro.serving.paged_cache.PageShipment` priced by
+``core/noc.py::page_ship`` — and imports it into a decode replica
+chosen by prefix residency then ``min_region_free`` pressure.  Tokens
+are bit-identical to a colocated run: the first token is argmaxed at
+the prefill boundary on the source replica and travels with the
+shipment.  A shipment that no decode replica can take is deferred in
+place and retried next tick.
 """
 from __future__ import annotations
 
@@ -36,6 +52,7 @@ import numpy as np
 
 from repro.obs.metrics import serving_registry
 from repro.obs.tracer import NULL_TRACER
+from repro.serving.paged_cache import num_blocks
 from repro.serving.scheduler import RequestState, Scheduler
 
 POLICIES = ("round_robin", "least_loaded", "session_affinity",
@@ -45,13 +62,15 @@ POLICIES = ("round_robin", "least_loaded", "session_affinity",
 class Router:
     """Front end owning N engine replicas and a dispatch policy.
 
-    ``engines`` need only the narrow replica interface (``admit`` /
-    ``tick`` / ``load_report`` / ``requeue`` / ``completed`` /
-    ``busy()``, plus ``prefix_residency`` for prefix affinity) — unit
+    ``engines`` need only the :class:`repro.serving.replica_api.Replica`
+    protocol (``admit`` / ``tick`` / ``busy`` / ``load_report`` /
+    ``requeue`` / ``export_slot_pages`` / ``import_slot_pages``, plus
+    ``completed`` and ``prefix_residency`` for prefix affinity) — unit
     tests drive the policies with stub replicas.
     """
 
-    def __init__(self, engines: Sequence, policy: str = "round_robin"):
+    def __init__(self, engines: Sequence, policy: str = "round_robin",
+                 tiers: Optional[Tuple[int, int]] = None):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; "
                              f"choose from {POLICIES}")
@@ -60,11 +79,34 @@ class Router:
         self.engines = list(engines)
         self.schedulers = [Scheduler(e) for e in self.engines]
         self.policy = policy
+        self.tiers: Optional[Tuple[int, int]] = None
+        self.prefill_idx: Tuple[int, ...] = ()
+        self.decode_idx: Tuple[int, ...] = ()
+        if tiers is not None:
+            p, d = int(tiers[0]), int(tiers[1])
+            if p < 1 or d < 1:
+                raise ValueError("tiers needs >=1 prefill and >=1 "
+                                 f"decode replica, got {p}:{d}")
+            if p + d != len(engines):
+                raise ValueError(f"tiers {p}:{d} must sum to the "
+                                 f"{len(engines)} replicas")
+            self.tiers = (p, d)
+            self.prefill_idx = tuple(range(p))
+            self.decode_idx = tuple(range(p, p + d))
+            for i in self.prefill_idx:
+                self.engines[i].role = "prefill"
+            for i in self.decode_idx:
+                self.engines[i].role = "decode"
         self._rr = 0
         self._sessions: Dict[int, int] = {}
         self._prefix_hint: Dict[bytes, int] = {}
         # (rid, replica) in dispatch order — deterministic policy audit
         self.dispatch_log: List[Tuple[int, int]] = []
+        # (rid, src, dst) per shipped handoff — deterministic tier audit
+        self.ship_log: List[Tuple[int, int, int]] = []
+        self.shipments = 0
+        self.shipped_pages = 0
+        self.ship_cost_s = 0.0
         self._tracer = NULL_TRACER
 
     def set_tracer(self, tracer) -> None:
@@ -79,15 +121,14 @@ class Router:
     # -- policy --------------------------------------------------------
     def _load_score(self, i: int) -> Tuple[int, int, int, int]:
         rep = self.engines[i].load_report()
-        backlog = rep["queue_depth"] + len(self.schedulers[i].pending)
+        backlog = rep.queue_depth + len(self.schedulers[i].pending)
         # placement-aware tiebreak: of two replicas with equal total
         # headroom, prefer the one whose scarcest per-channel region has
         # the most free pages — an affinity admission there stays
         # co-located instead of spilling across the NoC (replicas
         # without a placement map report min_region_free == free_pages,
         # so the extra component is inert for them)
-        return (backlog, -rep["free_pages"],
-                -rep.get("min_region_free", rep["free_pages"]), i)
+        return (backlog, -rep.free_pages, -rep.min_region_free, i)
 
     def _least_loaded(self, among: Optional[Sequence[int]] = None) -> int:
         return min(among if among is not None
@@ -103,6 +144,10 @@ class Router:
 
     def select(self, req: RequestState) -> int:
         n = len(self.engines)
+        if self.tiers is not None:
+            # disaggregated: arrivals always land on the prefill tier;
+            # the decode placement decision happens at harvest time
+            return self._least_loaded(self.prefill_idx)
         if self.policy == "round_robin":
             i = self._rr % n
             self._rr += 1
@@ -134,6 +179,64 @@ class Router:
         self.schedulers[i].enqueue(req)
         return i
 
+    # -- tier handoff (prefill -> decode page shipping) ----------------
+    def _decode_target(self, req: RequestState, need: int
+                       ) -> Optional[int]:
+        """Decode replica for a finished prefill: among replicas with a
+        free slot and ``need`` free pages (conservative — prefix sharing
+        on import only shrinks the bill), prefer the one already holding
+        the most of the request's prefix pages, then break ties by load
+        with ``min_region_free`` pressure.  ``None``: defer, retry."""
+        reports = {j: self.engines[j].load_report()
+                   for j in self.decode_idx}
+        fit = [j for j in self.decode_idx
+               if reports[j].free_slots > 0
+               and reports[j].free_pages >= need]
+        if not fit:
+            return None
+        res = {j: self.engines[j].prefix_residency(req.prompt)
+               for j in fit}
+        best = max(res.values())
+        ties = [j for j in fit if res[j] == best] if best > 0 else fit
+        return min(ties, key=self._load_score)
+
+    def _ship_ready(self) -> int:
+        """Harvest finished prefills off the prefill tier and ship each
+        to its decode target.  Requests still mid chunked-prefill export
+        as ``None`` (deferred); a target refusal re-imports into the
+        source (which just freed exactly those pages) and retries next
+        tick, so a handoff is atomic either way."""
+        if self.tiers is None:
+            return 0
+        shipped = 0
+        for i in self.prefill_idx:
+            src = self.engines[i]
+            page = src.ecfg.page_size
+            for r in sorted(src.active.values(),
+                            key=lambda r: (r.arrival_s, r.rid)):
+                need = num_blocks(len(r.prompt), page)
+                j = self._decode_target(r, need)
+                if j is None:
+                    continue        # decode tier full — defer in place
+                ship = src.export_slot_pages(r.rid)
+                if ship is None:
+                    continue        # mid chunked-prefill — defer
+                if not self.engines[j].import_slot_pages(ship):
+                    ok = src.import_slot_pages(ship)
+                    assert ok, "source must re-absorb a refused shipment"
+                    continue
+                self.shipments += 1
+                self.shipped_pages += ship.n_pages
+                self.ship_cost_s += ship.cost_s
+                self.ship_log.append((r.rid, i, j))
+                if self._tracer.enabled:
+                    self._tracer.emit(
+                        "ship", replica=i, rid=r.rid, pages=ship.n_pages,
+                        bytes=ship.bytes_on_wire, cost_s=ship.cost_s,
+                        src=i, dst=j)
+                shipped += 1
+        return shipped
+
     # -- cluster trace loop --------------------------------------------
     def run_trace(self, reqs: List[RequestState]) -> dict:
         """Dispatch the trace at arrival time and drive every replica's
@@ -147,6 +250,7 @@ class Router:
                 self.dispatch(pending.pop(0))
             for sch in self.schedulers:
                 sch.tick(now)
+            self._ship_ready()
             if pending and all(sch.idle() for sch in self.schedulers):
                 time.sleep(max(0.0, min(0.01,
                                         pending[0].arrival_s - now)))
@@ -230,6 +334,12 @@ class Router:
             "substrate_configs": substrate_cfgs,
             "modeled_tokens_per_s": modeled_rate,
             "array_util_mean": util_sum / util_n if util_n else 0.0,
+            # disaggregation channel ("" / 0 for colocated clusters)
+            "tiers": (f"{self.tiers[0]}:{self.tiers[1]}"
+                      if self.tiers else ""),
+            "shipments": self.shipments,
+            "shipped_pages": self.shipped_pages,
+            "ship_cost_s": self.ship_cost_s,
             "per_replica": per_replica,
             # bucketed cluster-level distribution summaries (live only)
             "hists": reg.summaries()["histograms"],
@@ -238,7 +348,8 @@ class Router:
 
 def make_cluster(entry, ecfg, n_replicas: int, tp: int = 1,
                  policy: str = "round_robin",
-                 share_compiled: bool = True) -> Router:
+                 share_compiled: bool = True,
+                 tiers: Optional[Tuple[int, int]] = None) -> Router:
     """Build N identical engine replicas behind a :class:`Router`.
 
     Each replica gets its OWN ``EngineConfig`` copy (the paged engine
@@ -248,8 +359,14 @@ def make_cluster(entry, ecfg, n_replicas: int, tp: int = 1,
     first replica's parameter pytree and jitted prefill/decode/extend
     callables are shared by the rest instead of re-initializing and
     recompiling per replica.
+
+    ``tiers=(P, D)`` disaggregates the cluster (``P + D == n_replicas``;
+    requires a paged config — page shipping moves block-table rows).
     """
     from repro.serving.engine import make_engine
+    if tiers is not None and not ecfg.paged:
+        raise ValueError("tiers requires a paged EngineConfig "
+                         "(page shipping moves KV pages)")
     engines = [make_engine(entry, replace(ecfg), tp=tp)
                for _ in range(n_replicas)]
     if share_compiled:
@@ -259,4 +376,4 @@ def make_cluster(entry, ecfg, n_replicas: int, tp: int = 1,
             eng._prefill = first._prefill
             eng._decode = first._decode
             eng._extend = first._extend
-    return Router(engines, policy=policy)
+    return Router(engines, policy=policy, tiers=tiers)

@@ -20,7 +20,7 @@ implement:
   prefill) — False when the replica is saturated;
 * ``tick() -> int`` — advance one iteration (at most one prefill chunk
   co-scheduled with one decode step); returns #finished;
-* ``load_report() -> dict`` — ``queue_depth`` / ``free_slots`` /
+* ``load_report() -> LoadReport`` — ``queue_depth`` / ``free_slots`` /
   ``free_pages`` for load-balancing decisions;
 * ``requeue`` (list of preempted requests), ``completed``, ``busy()``.
 

@@ -94,6 +94,14 @@ def test_metrics_unregistered_fixture_flagged():
     assert f.file.endswith("pr9_metrics_unregistered.py") and f.line > 0
 
 
+def test_ship_trie_drop_fixture_flagged():
+    findings = run_fixture("pr10-ship-trie-drop")
+    assert findings
+    assert all(f.invariant == "ship-integrity" for f in findings)
+    assert "trie" in findings[0].message
+    assert findings[0].file.endswith("pr10_ship_trie_drop.py")
+
+
 def test_metric_contract_clean_and_stale_entry_flagged(monkeypatch):
     """The real Scheduler/Router surfaces match the metric-name contract
     exactly; a contract entry without an emitter is a stale-contract
@@ -137,4 +145,5 @@ def test_cli_rejects_unknown_fixture():
     assert set(FIXTURE_NAMES) == {"pr2-scatter-clip", "pr2-inactive-lane",
                                   "pr2-refcount-free", "pr6-metrics-drift",
                                   "pr8-fused-double-count",
-                                  "pr9-metrics-unregistered"}
+                                  "pr9-metrics-unregistered",
+                                  "pr10-ship-trie-drop"}

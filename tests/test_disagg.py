@@ -1,0 +1,264 @@
+"""Prefill/decode disaggregation tests (PR 10): page-shipment pricing,
+cache-level export/import integrity, the Replica protocol, tiered-router
+dispatch determinism, sim-mirror shipment-latency accounting, and
+engine-level token exactness across the tier handoff (including the
+mid-chunked-prefill deferral)."""
+import numpy as np
+import pytest
+
+from repro.core.hw import snake_system
+from repro.core.noc import page_gather, page_ship
+from repro.core.serving_sim import nmp_latency_model, simulate_cluster
+from repro.models import registry
+from repro.obs.export import trace_report
+from repro.obs.tracer import Tracer
+from repro.serving.engine import EngineConfig, make_engine
+from repro.serving.replica_api import (LoadReport, PlacementReport,
+                                       Replica)
+from repro.serving.router import Router, make_cluster
+from repro.serving.scheduler import (RequestState,
+                                     make_grouped_prefix_trace)
+
+from tests.test_serving_router import _StubReplica
+
+
+# ---------------------------------------------------------------------------
+# Pricing: the cross-stack link term on top of the intra-stack gather
+# ---------------------------------------------------------------------------
+def test_page_ship_hops0_is_page_gather():
+    sys = snake_system()
+    payload, segments = 1 << 20, 16
+    ship = page_ship(sys, payload, segments, hops=0)
+    gather = page_gather(sys, 0, payload, segments)
+    assert ship == gather
+
+
+def test_page_ship_link_terms_monotonic():
+    sys = snake_system()
+    payload, segments = 1 << 20, 16
+    costs = [page_ship(sys, payload, segments, hops=h) for h in range(3)]
+    assert costs[0].time_s < costs[1].time_s < costs[2].time_s
+    # each extra hop adds exactly one link-latency crossing
+    d1 = costs[1].time_s - costs[0].time_s
+    d2 = costs[2].time_s - costs[1].time_s
+    assert d2 == pytest.approx(sys.xlink_latency_s)
+    assert d1 == pytest.approx(d2 + payload / sys.xlink_bw_bytes
+                               + payload / sys.dram_bw_per_pu)
+
+
+def test_page_ship_negative_hops_rejected():
+    with pytest.raises(ValueError):
+        page_ship(snake_system(), 1024, 1, hops=-1)
+
+
+# ---------------------------------------------------------------------------
+# Cache-level shipment integrity (the checker's ship op, run clean)
+# ---------------------------------------------------------------------------
+def test_ship_integrity_checker_clean_on_real_cache():
+    from repro.analysis.checks import allocator_model
+    assert allocator_model.check_ship_integrity() == []
+
+
+def test_trie_dropping_import_is_flagged():
+    from repro.analysis.checks import allocator_model
+    from repro.analysis.checks.fixtures import pr10_ship_trie_drop as fx
+    findings = allocator_model.check_ship_integrity(
+        cache_cls=fx.TrieDroppingCache)
+    assert findings and findings[0].invariant == "ship-integrity"
+
+
+# ---------------------------------------------------------------------------
+# Replica protocol: every implementation satisfies the runtime contract
+# ---------------------------------------------------------------------------
+def test_replica_protocol_typed_reports():
+    rep = LoadReport(active=1, prefilling=0, queue_depth=2, free_slots=3,
+                     free_pages=10, min_region_free=4,
+                     region_free=(4, 6))
+    d = rep.to_dict()
+    assert d["free_pages"] == 10 and d["region_free"] == [4, 6]
+    bare = LoadReport(active=0, prefilling=0, queue_depth=0,
+                      free_slots=1, free_pages=1, min_region_free=1)
+    assert "region_free" not in bare.to_dict()
+    assert PlacementReport().empty
+    assert PlacementReport().to_dict() == {}
+
+
+def test_stub_and_sim_replicas_satisfy_protocol():
+    assert isinstance(_StubReplica(), Replica)
+    from repro.core.operators import PAPER_MODELS
+    spec = PAPER_MODELS["LLaMA3-70B"]
+    lat = nmp_latency_model(snake_system(), spec, tp=8)
+    rep = simulate_cluster(lat, spec, 50.0, n_replicas=2, n_requests=4,
+                           input_len=256, output_len=16, max_batch=4,
+                           page_size=64, tiers=(1, 1))
+    assert rep.tiers == "1:1" and rep.shipments == 4
+
+
+def test_sim_replica_isinstance():
+    from repro.core.operators import PAPER_MODELS
+    from repro.core.serving_sim import _Replica
+    spec = PAPER_MODELS["LLaMA3-70B"]
+    lat = nmp_latency_model(snake_system(), spec, tp=8)
+    r = _Replica(lat, spec, max_batch=4, pages_cap=32, page_size=64,
+                 shared_full=0)
+    assert isinstance(r, Replica)
+
+
+# ---------------------------------------------------------------------------
+# Tiered router: validation + dispatch determinism on stub replicas
+# ---------------------------------------------------------------------------
+def _req(rid):
+    return RequestState(rid, np.arange(rid, rid + 8, dtype=np.int32))
+
+
+def test_tier_validation():
+    with pytest.raises(ValueError):
+        Router([_StubReplica() for _ in range(3)], tiers=(0, 3))
+    with pytest.raises(ValueError):
+        Router([_StubReplica() for _ in range(3)], tiers=(2, 2))
+    with pytest.raises(ValueError):
+        make_cluster(registry.get("yi-6b", reduced=True),
+                     EngineConfig(max_batch=2, max_seq=32, paged=False),
+                     2, tiers=(1, 1))
+
+
+def test_tiered_dispatch_targets_prefill_tier_only():
+    stubs = [_StubReplica(queue_depth=q) for q in (2, 0, 1, 0)]
+    router = Router(stubs, policy="round_robin", tiers=(2, 2))
+    assert [e.role for e in stubs] == ["prefill", "prefill",
+                                       "decode", "decode"]
+    # arrivals go to the least-loaded PREFILL replica, never to decode
+    picks = [router.dispatch(_req(i)) for i in range(4)]
+    assert set(picks) <= {0, 1}
+    # identical stub state must reproduce the identical pick sequence
+    stubs2 = [_StubReplica(queue_depth=q) for q in (2, 0, 1, 0)]
+    router2 = Router(stubs2, policy="round_robin", tiers=(2, 2))
+    assert [router2.dispatch(_req(i)) for i in range(4)] == picks
+
+
+# ---------------------------------------------------------------------------
+# Sim mirror: shipment latency on the modeled clock + trace accounting
+# ---------------------------------------------------------------------------
+def _sim(tiers=None, tracer=None, n_requests=12, **kw):
+    from repro.core.operators import PAPER_MODELS
+    spec = PAPER_MODELS["LLaMA3-70B"]
+    sys = snake_system()
+    lat = nmp_latency_model(sys, spec, tp=8)
+    return simulate_cluster(lat, spec, 50.0, n_replicas=4,
+                            n_requests=n_requests, input_len=512,
+                            output_len=32, max_batch=4, page_size=64,
+                            seed=0, tiers=tiers, tracer=tracer,
+                            sys=sys, **kw)
+
+
+def test_sim_ships_every_request_and_prices_the_link():
+    rep = _sim(tiers=(1, 3))
+    assert rep.tiers == "1:3"
+    assert rep.shipments == rep.completed == 12
+    assert rep.shipped_pages == 12 * (512 // 64)
+    assert rep.ship_cost_s > 0.0
+    colo = _sim()
+    assert colo.tiers == "" and colo.shipments == 0
+    # the link time is visible end-to-end: shipped requests cannot
+    # finish before their colocated counterparts on an idle cluster
+    assert rep.e2e_p50_s >= colo.e2e_p50_s
+
+
+def test_sim_ship_spans_match_report_accounting():
+    tr = Tracer(t0=0.0)
+    rep = _sim(tiers=(2, 2), tracer=tr)
+    ships = [ev for ev in tr.events if ev.kind == "ship"]
+    assert len(ships) == rep.shipments
+    assert sum(ev.dur for ev in ships) == pytest.approx(rep.ship_cost_s)
+    report = trace_report(tr.events)
+    assert report["phases"]["ship_s"] == pytest.approx(rep.ship_cost_s)
+    for ev in ships:
+        assert ev.args["src"] in (0, 1) and ev.args["dst"] in (2, 3)
+
+
+def test_sim_tier_ratio_ordering_decode_heavy_wins():
+    reps = {t: _sim(tiers=t, n_requests=16) for t in ((1, 3), (3, 1))}
+    assert reps[(1, 3)].tbt_mean_s < reps[(3, 1)].tbt_mean_s
+
+
+# ---------------------------------------------------------------------------
+# Engine handoff: bit-identical tokens, deferral mid chunked prefill
+# ---------------------------------------------------------------------------
+ENG_KW = dict(max_batch=3, max_seq=64, max_new_tokens=6, paged=True,
+              page_size=8, num_pages=24, prefix_sharing=True,
+              prefill_chunk=8)
+
+
+def _grouped_trace(entry, n=8, seed=0):
+    return make_grouped_prefix_trace(entry.config.vocab, rate_req_s=200.0,
+                                     n_requests=n, n_groups=2,
+                                     prefix_len=16, tail_len=6, skew=0.8,
+                                     seed=seed)
+
+
+@pytest.mark.slow
+def test_disagg_cluster_token_exact_vs_colocated():
+    """A 1P:1D tiered cluster must decode the exact tokens of the bare
+    engine on a shared-prefix trace — the handoff ships KV pages, the
+    trie dedup on the decode tier, and greedy decode is
+    schedule-independent."""
+    entry = registry.get("yi-6b", reduced=True)
+    eng = make_engine(entry, EngineConfig(**ENG_KW))
+    eng.run_trace(_grouped_trace(entry))
+    base = {r.rid: r.tokens_out for r in eng.completed}
+    router = make_cluster(entry, EngineConfig(**ENG_KW), 2, tiers=(1, 1))
+    m = router.run_trace(_grouped_trace(entry))
+    got = {r.rid: r.tokens_out
+           for e in router.engines for r in e.completed}
+    assert got == base
+    assert m["tiers"] == "1:1"
+    assert m["shipments"] == len(base)
+    assert m["shipped_pages"] > 0 and m["ship_cost_s"] > 0.0
+    # handoffs are logged (rid, src, dst) with src/dst in tier order
+    assert len(router.ship_log) == len(base)
+    assert all(src == 0 and dst == 1
+               for _, src, dst in router.ship_log)
+    # prefill-tier engine completed nothing; decode tier everything
+    assert not router.engines[0].completed
+    assert len(router.engines[1].completed) == len(base)
+
+
+@pytest.mark.slow
+def test_export_deferred_mid_chunked_prefill():
+    """A request still mid chunked-prefill exports as None (deferred);
+    once the chunk scheduler finishes, the shipment carries the whole
+    prompt and the first decoded token, and the destination engine
+    continues to the exact colocated completion."""
+    entry = registry.get("yi-6b", reduced=True)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, entry.config.vocab, 24).astype(np.int32)
+
+    ref = make_engine(entry, EngineConfig(**ENG_KW))
+    assert ref.admit(RequestState(0, prompt.copy()))
+    while ref.busy():
+        ref.tick()
+    want = ref.completed[0].tokens_out
+
+    src = make_engine(entry, EngineConfig(**ENG_KW))
+    dst = make_engine(entry, EngineConfig(**ENG_KW))
+    src.role, dst.role = "prefill", "decode"
+    req = RequestState(0, prompt.copy())
+    assert src.admit(req)
+    assert src._prefilling is not None, "24 tokens must chunk at 8"
+    assert src.export_slot_pages(0) is None   # deferred: mid prefill
+    while src._prefilling is not None:
+        src.tick()
+    ship = src.export_slot_pages(0)
+    assert ship is not None and ship.n_tokens == len(prompt)
+    assert ship.cost_s > 0.0 and ship.next_tok >= 0
+    assert not src.active and not src.busy()
+    assert dst.import_slot_pages(ship)
+    # source pool fully released; destination holds the prompt pages
+    assert src.paged.alloc.used_pages == 0
+    assert src.paged.shipped_pages == ship.n_pages
+    assert dst.paged.alloc.used_pages >= ship.n_pages
+    assert dst.paged.mirror_consistent()
+    while dst.busy():
+        dst.tick()
+    assert dst.completed[0].tokens_out == want
+    assert dst.paged.alloc.used_pages == 0

@@ -302,7 +302,10 @@ def test_engine_placement_token_exact_and_reported(policy):
     assert m["kv_gather_cost_mean_s"] > 0.0
     assert 0.0 < m["kv_gather_concentration"] <= 1.0
     rep = eng.load_report()
-    assert rep["min_region_free"] == min(rep["region_free"])
+    assert rep.min_region_free == min(rep.region_free)
+    # the JSON boundary keeps the legacy dict keys
+    d = rep.to_dict()
+    assert d["min_region_free"] == min(d["region_free"])
 
 
 def test_engine_without_placement_reports_none():
@@ -313,7 +316,10 @@ def test_engine_without_placement_reports_none():
     m = eng.run_trace(_trace(entry, n=3))
     assert m["placement_policy"] == "none"
     assert m["kv_gather_cost_mean_s"] == 0.0
-    assert "region_free" not in eng.load_report()
+    rep = eng.load_report()
+    assert rep.region_free == ()
+    assert rep.min_region_free == rep.free_pages
+    assert "region_free" not in rep.to_dict()
 
 
 def test_sim_placement_scores_policies_without_changing_schedule():

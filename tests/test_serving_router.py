@@ -13,6 +13,7 @@ from repro.core.serving_sim import (make_cluster_trace, nmp_latency_model,
                                     simulate_cluster)
 from repro.models import registry
 from repro.serving.engine import EngineConfig, make_engine
+from repro.serving.replica_api import LoadReport, Replica
 from repro.serving.router import Router, make_cluster
 from repro.serving.scheduler import (RequestState, load_trace,
                                      make_grouped_prefix_trace, make_trace,
@@ -23,29 +24,46 @@ from repro.serving.scheduler import (RequestState, load_trace,
 # Policy unit tests on stub replicas
 # ---------------------------------------------------------------------------
 class _StubReplica:
-    """Implements only the narrow replica interface the router reads."""
+    """Implements the ``replica_api.Replica`` protocol the router reads
+    (the mirror-drift checker pins the method set)."""
 
     def __init__(self, free_pages=10, queue_depth=0, residency=None):
         class _E:
             page_size = 8
         self.ecfg = _E()
+        self.role = "mixed"
         self.requeue = []
         self.completed = []
         self.preemption_count = 0
         self.free_pages = free_pages
         self.queue_depth = queue_depth
         self.residency = residency or (lambda prompt: 0)
+        self.imported = []
+
+    def admit(self, req):
+        return True
+
+    def tick(self):
+        return 0
 
     def load_report(self):
-        return {"active": self.queue_depth, "prefilling": 0,
-                "queue_depth": self.queue_depth, "free_slots": 4,
-                "free_pages": self.free_pages}
+        return LoadReport(active=self.queue_depth, prefilling=0,
+                          queue_depth=self.queue_depth, free_slots=4,
+                          free_pages=self.free_pages,
+                          min_region_free=self.free_pages)
 
     def prefix_residency(self, prompt):
         return self.residency(prompt)
 
     def busy(self):
         return False
+
+    def export_slot_pages(self, rid):
+        raise KeyError(f"stub replica holds no request {rid}")
+
+    def import_slot_pages(self, shipment):
+        self.imported.append(shipment)
+        return True
 
 
 def _req(rid, prompt=None, session=None):
